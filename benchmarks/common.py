@@ -1,0 +1,84 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+
+def timed(fn: Callable, *args, repeat: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(name: str, value, unit: str = "", derived: str = "") -> None:
+    """One CSV line: name,value,unit,derived."""
+    if isinstance(value, float):
+        value = f"{value:.6g}"
+    print(f"{name},{value},{unit},{derived}", flush=True)
+
+
+def run_concrete_suite(bench, nx: int = 72, ny: int = 8, nz: int = 6,
+                       block_x: int = 64):
+    """Run a KernelGen benchmark through all four PTX versions on the
+    concrete warp emulator; returns {version: RunStats} (2D/3D only)."""
+    import numpy as np
+    from repro.core.frontend.stencil import lower_to_ptx
+    from repro.core.synthesis.pipeline import ptxasw_kernel
+    from repro.core.synthesis.codegen import synthesize
+    from repro.core.emulator.machine import emulate
+    from repro.core.synthesis.detect import detect
+    from repro.core.emulator.concrete import run_concrete
+
+    prog = bench.program
+    nd = prog.ndim
+    kernel = lower_to_ptx(prog)
+    flows = emulate(kernel)
+    detection = detect(kernel, flows, max_delta=bench.max_delta)
+    rng = np.random.default_rng(0)
+    shape = {2: (ny, nx), 3: (nz, ny, nx), 1: (nx,)}[nd]
+
+    def params():
+        p = {}
+        for arr, adim in prog.arrays.items():
+            p[arr] = rng.standard_normal(shape[-adim:]).astype(np.float32) \
+                if arr != prog.out.array else \
+                np.zeros(shape[-adim:], np.float32)
+        for i in range(nd):
+            p[f"n{i}"] = shape[::-1][i] if nd > 1 else shape[0]
+        # scalars
+        import struct
+        for s in prog.scalars:
+            import numpy as _np
+            p[s] = int(np.frombuffer(
+                np.float32(0.3).tobytes(), np.uint32)[0])
+        return p
+
+    h = prog.halo[0]
+    interior_x = shape[-1] - 2 * h
+    nbx = -(-interior_x // block_x)
+    if nd == 1:
+        nctaid = (nbx, 1, 1)
+    elif nd == 2:
+        nctaid = (nbx, shape[0] - 2 * prog.halo[1], 1)
+    else:
+        nctaid = (nbx, shape[1] - 2 * prog.halo[1],
+                  shape[0] - 2 * prog.halo[2])
+
+    versions = {"original": kernel}
+    for mode, vname in (("noload", "noload"), ("nocorner", "nocorner"),
+                        ("ptxasw", "ptxasw")):
+        versions[vname] = synthesize(kernel, detection, mode=mode)
+    stats = {}
+    for vname, k in versions.items():
+        stats[vname] = run_concrete(k, params(), ntid=(block_x, 1, 1),
+                                    nctaid=nctaid)
+    return stats, detection

@@ -1,0 +1,195 @@
+"""§Perf hillclimb driver: lower config VARIANTS of the three target
+cells and record the roofline deltas.
+
+Each variant is a (name, hypothesis, config-override) triple; the
+driver re-lowers the cell, re-analyses the HLO, and writes
+experiments/perf/<cell>.json with before/after terms so EXPERIMENTS.md
+§Perf can show the full hypothesis -> change -> measure -> verdict log.
+
+Run:  PYTHONPATH=src python -m benchmarks.hillclimb [--cell mamba2]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List, Tuple
+
+PERF_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "perf"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+# (variant name, hypothesis, config overrides)
+CELLS: Dict[str, Dict] = {
+    "granite": {
+        "arch": "granite-moe-1b-a400m",
+        "shape": "train_4k",
+        "variants": [
+            ("baseline_2d",
+             "FRAMEWORK BASELINE: 2D MoE (E/ep over data, F/tp over "
+             "model), fp32-upcast norms; expect the per-expert "
+             "all_gather+reduce_scatter of the token set over the tensor "
+             "axis to dominate collectives",
+             {"moe_schedule": "2d", "norm_impl": "f32"}),
+            ("ep_tp",
+             "HYPOTHESIS: granite experts are tiny (512-wide FFN, 6 MB/"
+             "layer/device if stored whole on tensor shards) -> storing "
+             "whole experts on the model axis removes the ag+rs pair "
+             "entirely; collective bytes should drop >2x with unchanged "
+             "FLOPs",
+             {"moe_schedule": "ep_tp", "norm_impl": "f32"}),
+            ("ep_tp_lean_norm",
+             "HYPOTHESIS: fp32-upcast norms materialize f32 (B,S,D) "
+             "tensors fwd+bwd per layer (found via per-opcode byte "
+             "attribution on mamba2); stats-only-fp32 norms keep the "
+             "residual stream bf16 -> memory term should drop further",
+             {"moe_schedule": "ep_tp", "norm_impl": "lean"}),
+        ],
+    },
+    "mamba2": {
+        "arch": "mamba2-1.3b",
+        "shape": "train_4k",
+        "variants": [
+            ("baseline_q256_f32",
+             "FRAMEWORK BASELINE: SSD chunk Q=256, fp32 intra-chunk "
+             "matmuls, fp32-upcast norms; expected HBM term dominated by "
+             "the (B,Q,Q,H) decay/score tensors",
+             {"norm_impl": "f32"}),
+            ("q128",
+             "HYPOTHESIS (REFUTED): quadratic-term traffic ~Q, state "
+             "traffic ~1/Q -> Q*=sqrt(2NP)=128 should cut memory ~1.7x. "
+             "MEASURED: memory got WORSE (+13%): per-opcode attribution "
+             "showed the score tensors are sharded 16-way over heads and "
+             "contribute little; doubling chunk count doubles state-pass "
+             "and boundary traffic instead",
+             {"ssm_chunk": 128, "norm_impl": "f32"}),
+            ("lean_norm",
+             "HYPOTHESIS (from the byte attribution): 17 TB/device of "
+             "f32[B,S,D] fusion traffic comes from fp32-upcast rmsnorm "
+             "(fwd+bwd+remat x48 layers) which also upcasts the TP "
+             "partial-sum all-reduces; stats-only-fp32 norms keep all "
+             "full-width tensors bf16 -> expect memory ~2x down and "
+             "collectives ~2x down",
+             {"norm_impl": "lean"}),
+            ("lean_norm_bf16mm",
+             "HYPOTHESIS: on top of lean norms, bf16 SSD matmul operands "
+             "(fp32 accumulation) halve the remaining intra-chunk "
+             "traffic; validated vs the sequential oracle",
+             {"norm_impl": "lean", "ssm_mm_dtype": "compute"}),
+            ("pad_vocab",
+             "HYPOTHESIS: vocab 50280 is not divisible by |model|=16, so "
+             "the unembed table cannot shard over the tensor axis and the "
+             "CE contraction partial-sums a full f32 (B,c,50280) logits "
+             "tensor over the data axis (1.6 GB x 8 chunks x fwd/bwd). "
+             "Padding the table to 50304 rows (-inf bias on pads) shards "
+             "the logits 16-way and deletes that all-reduce",
+             {"norm_impl": "lean", "ssm_mm_dtype": "compute",
+              "pad_vocab_multiple": 128}),
+        ],
+    },
+    "zamba2": {
+        "arch": "zamba2-1.2b",
+        "shape": "train_4k",
+        "variants": [
+            ("baseline_q256_f32",
+             "FRAMEWORK BASELINE: worst roofline fraction of all train "
+             "cells (SSD memory term dominates)",
+             {"norm_impl": "f32"}),
+            ("lean_norm_bf16mm",
+             "HYPOTHESIS: apply both mamba2 wins (stats-only-fp32 norms "
+             "+ bf16 SSD matmul operands); zamba2 adds a shared attn "
+             "block whose norms also lean out -> expect >= mamba2's "
+             "relative gain",
+             {"norm_impl": "lean", "ssm_mm_dtype": "compute"}),
+            ("combined_pad_vocab",
+             "HYPOTHESIS: zamba2's vocab (32000) IS divisible by 16, so "
+             "(unlike mamba2) vocab padding should be a NO-OP here — a "
+             "negative control for the pad_vocab mechanism",
+             {"norm_impl": "lean", "ssm_mm_dtype": "compute",
+              "pad_vocab_multiple": 128}),
+        ],
+    },
+    # ---- round 2 (picked by the post-fix roofline) ----------------------
+    "starcoder2": {
+        "arch": "starcoder2-3b",
+        "shape": "prefill_32k",
+        "variants": [
+            ("blockwise",
+             "POST-SWEEP FINDING (useful=0.004): heads=24 / kv=2 don't "
+             "divide |model|=16 -> head-sharded attention replicates "
+             "across the tensor axis",
+             {"attn_impl": "blockwise"}),
+            ("ring",
+             "HYPOTHESIS: sequence-parallel ring attention over `model` "
+             "(ppermute KV rotation — the mesh-level shuffle) shards S/16 "
+             "with replicated heads: ~16x compute expected. MEASURED "
+             "(pre-prefill-constraint): 64.8 -> 4.14s (15.7x)",
+             {"attn_impl": "ring"}),
+        ],
+    },
+    "yi": {
+        "arch": "yi-9b",
+        "shape": "prefill_32k",
+        "variants": [
+            ("constrained_prefill",
+             "FIX (found by per-dot FLOP attribution): prefill blocks "
+             "lacked the activation batch constraint -> GSPMD replicated "
+             "B over the data axis (compute 8.94 -> 0.906s, 9.9x; now in "
+             "every prefill path)",
+             {}),
+        ],
+    },
+}
+
+
+def run_cell(key: str) -> Dict:
+    from repro.configs import get_config
+    from repro.launch.dryrun import lower_cell
+    spec = CELLS[key]
+    cfg0 = get_config(spec["arch"])
+    out = {"arch": spec["arch"], "shape": spec["shape"], "variants": []}
+    for name, hypothesis, over in spec["variants"]:
+        cfg = cfg0.replace(**over) if over else cfg0
+        rec = lower_cell(spec["arch"], spec["shape"], multi_pod=False,
+                         cfg_override=cfg)
+        a = rec["analyzed"]
+        terms = {
+            "t_compute_s": a["matmul_flops"] / PEAK_FLOPS,
+            "t_memory_s": a["bytes_hbm"] / HBM_BW,
+            "t_memory_upper_s": a["bytes_accessed"] / HBM_BW,
+            "t_collective_s": sum(a["collective_bytes"].values()) / ICI_BW,
+            "collectives": a["collective_bytes"],
+            "flops_per_dev": a["matmul_flops"],
+            "temp_gb": rec["memory"]["temp_bytes"] / 1e9,
+            "compile_s": rec["compile_s"],
+        }
+        terms["dominant"] = max(
+            (("compute", terms["t_compute_s"]),
+             ("memory", terms["t_memory_s"]),
+             ("collective", terms["t_collective_s"])),
+            key=lambda kv: kv[1])[0]
+        out["variants"].append({"name": name, "hypothesis": hypothesis,
+                                "overrides": over, "terms": terms})
+        t = terms
+        print(f"[{key}:{name}] compute={t['t_compute_s']:.3f}s "
+              f"memory={t['t_memory_s']:.3f}s "
+              f"coll={t['t_collective_s']:.3f}s dom={t['dominant']} "
+              f"temp={t['temp_gb']:.1f}GB", flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS))
+    args = ap.parse_args()
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    for key in ([args.cell] if args.cell else list(CELLS)):
+        res = run_cell(key)
+        (PERF_DIR / f"{key}.json").write_text(json.dumps(res, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""E6/E7 — Roofline analysis from the dry-run compiled artifacts.
+
+For each (arch x shape) cell on the single-pod 16x16 mesh:
+
+  compute term    = flops_per_device / 197e12           [bf16 peak]
+  memory term     = bytes_per_device / 819e9            [HBM bw]
+  collective term = collective_bytes_per_device / 50e9  [ICI per link]
+
+(flops/bytes are the trip-count-corrected per-device figures from
+launch/hlo_analysis.py; dividing per-device numbers by per-chip rates is
+identical to the global/(chips x rate) formulation.)
+
+Each row also records MODEL_FLOPS = 6·N_eff·D (models/accounting.py),
+the useful-compute ratio MODEL_FLOPS / HLO_FLOPS, the dominant term,
+and an auto-generated next-action hint.  Output: CSV lines + markdown
+table at experiments/roofline_16x16.md.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.models.accounting import model_flops
+
+from .common import emit
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT_MD = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "roofline_16x16.md"
+
+
+def _hint(row: Dict) -> str:
+    dom = row["dominant"]
+    if row["useful_ratio"] < 0.15 and row["t_compute_s"] > 0.01:
+        return ("useful ratio <15%: compute is replicated or wasted — check "
+                "the sharding divisibility report (heads/kv vs |model|), "
+                "masked attention blocks, and MoE capacity overcompute")
+    if dom == "compute":
+        if row["useful_ratio"] < 0.5:
+            return ("compute-bound but <50% useful: cut remat recompute or "
+                    "masked attention blocks")
+        return "compute-bound at high useful ratio: near roofline"
+    if dom == "memory":
+        if row["t_collective_s"] > row["t_memory_s"] / 4:
+            return ("memory-dominant (CPU-fusion upper bound) with a large "
+                    "collective term: overlap/shrink collectives first, "
+                    "then fuse for arithmetic intensity")
+        return ("memory-bound: increase arithmetic intensity (fuse, widen "
+                "tiles, bf16 residuals) or overlap HBM with MXU; note the "
+                "CPU-fusion byte count is an upper bound")
+    return ("collective-bound: overlap collectives with compute, shrink "
+            "gathered dims, or compress the reduce")
+
+
+def analyze_cell(rec: Dict) -> Optional[Dict]:
+    if "error" in rec or "skipped" in rec:
+        return None
+    a = rec["analyzed"]
+    n_dev = rec["n_devices"]
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    mf = model_flops(cfg, shape)
+    t_c = a["matmul_flops"] / PEAK_FLOPS
+    # memory term: TPU-fusion approximation (materialization points);
+    # the every-op figure is kept as an upper bound
+    t_m = a.get("bytes_hbm", a["bytes_accessed"]) / HBM_BW
+    t_m_upper = a["bytes_accessed"] / HBM_BW
+    t_n = sum(a["collective_bytes"].values()) / ICI_BW
+    dom = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+              key=lambda kv: kv[1])[0]
+    hlo_global = a["matmul_flops"] * n_dev
+    row = {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_n,
+        "t_memory_upper_s": t_m_upper,
+        "dominant": dom,
+        "model_flops": mf["model_flops"],
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": (mf["model_flops"] / hlo_global
+                         if hlo_global else 0.0),
+        "n_params": mf["n_params"],
+        "bound_step_s": max(t_c, t_m, t_n),
+        "roofline_frac": (t_c / max(t_c, t_m, t_n)
+                          if max(t_c, t_m, t_n) > 0 else 0.0),
+        "temp_gb": (rec["memory"]["temp_bytes"] or 0) / 1e9,
+        "collectives": a["collective_bytes"],
+    }
+    row["hint"] = _hint(row)
+    return row
+
+
+def load_rows(mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for f in sorted((DRYRUN_DIR / mesh).glob("*.json")):
+        r = analyze_cell(json.loads(f.read_text()))
+        if r:
+            rows.append(r)
+    return rows
+
+
+def pick_hillclimb_cells(rows: List[Dict]) -> Dict[str, Dict]:
+    """The three §Perf targets: worst roofline fraction, most
+    collective-bound, most paper-representative."""
+    trains = [r for r in rows if r["shape"] == "train_4k"]
+    worst = min(trains, key=lambda r: r["roofline_frac"])
+    coll = max(rows, key=lambda r: r["t_collective_s"]
+               / max(r["bound_step_s"], 1e-12))
+    paper = next(r for r in rows
+                 if r["arch"] == "mamba2-1.3b" and r["shape"] == "train_4k")
+    return {"worst_roofline": worst, "most_collective": coll,
+            "paper_representative": paper}
+
+
+def run() -> bool:
+    rows = load_rows("16x16")
+    if not rows:
+        emit("roofline.NO_DATA", 0, "bool",
+             "run PYTHONPATH=src python -m repro.launch.dryrun first")
+        return False
+    lines = ["# Roofline — 16x16 (256 chips), per (arch x shape)\n",
+             "| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL_FLOPS | useful | temp GB/dev | hint |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        emit(f"roofline.{r['arch']}.{r['shape']}.compute_s",
+             r["t_compute_s"], "s")
+        emit(f"roofline.{r['arch']}.{r['shape']}.memory_s",
+             r["t_memory_s"], "s")
+        emit(f"roofline.{r['arch']}.{r['shape']}.collective_s",
+             r["t_collective_s"], "s")
+        emit(f"roofline.{r['arch']}.{r['shape']}.dominant", r["dominant"])
+        emit(f"roofline.{r['arch']}.{r['shape']}.useful_ratio",
+             r["useful_ratio"], "")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_collective_s']:.3f} | "
+            f"{r['dominant']} | {r['model_flops']:.3e} | "
+            f"{r['useful_ratio']:.2f} | {r['temp_gb']:.1f} | {r['hint']} |")
+    picks = pick_hillclimb_cells(rows)
+    lines.append("\n## Hillclimb targets (§Perf)\n")
+    for why, r in picks.items():
+        lines.append(f"* **{why}**: {r['arch']} x {r['shape']} "
+                     f"(dominant={r['dominant']}, "
+                     f"useful={r['useful_ratio']:.2f})")
+        emit(f"roofline.pick.{why}", f"{r['arch']}:{r['shape']}")
+    OUT_MD.write_text("\n".join(lines) + "\n")
+    emit("roofline.rows", len(rows), "cells")
+    return True

@@ -1,0 +1,57 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  E1  table2_kernelgen   Table 2 (shuffle/load/delta, 16 benchmarks)
+  E2  fig2_cycle_model   Figure 2/3 structure (4 GPU gens x 4 versions)
+  E3  sec85_applications Section 8.5 stencils at |N| <= 1
+  E4  table1_latency     Table 1 calibration + profitability ratios
+  E5  pallas_traffic     TPU port: HBM traffic naive/paper/tile + conv1d
+  E7  roofline           dry-run roofline terms + hillclimb picks
+
+Output: ``name,value,unit,derived`` CSV lines.
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only E1,E5]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of E1,E2,E3,E4,E5,E7")
+    args = ap.parse_args()
+    from . import (fig2_cycle_model, pallas_traffic, roofline,
+                   sec85_applications, table1_latency, table2_kernelgen)
+    suites = {
+        "E1": ("table2_kernelgen", table2_kernelgen.run),
+        "E2": ("fig2_cycle_model", fig2_cycle_model.run),
+        "E3": ("sec85_applications", sec85_applications.run),
+        "E4": ("table1_latency", table1_latency.run),
+        "E5": ("pallas_traffic", pallas_traffic.run),
+        "E7": ("roofline", roofline.run),
+    }
+    selected = (args.only.split(",") if args.only else list(suites))
+    print("name,value,unit,derived")
+    ok_all = True
+    for key in selected:
+        name, fn = suites[key]
+        t0 = time.time()
+        try:
+            ok = fn()
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            print(f"{key}.EXCEPTION,{type(e).__name__}: {e},,", flush=True)
+            ok = False
+        ok_all &= bool(ok)
+        print(f"{key}.{name}.ok,{int(bool(ok))},bool,"
+              f"{time.time() - t0:.1f}s", flush=True)
+    print(f"ALL.ok,{int(ok_all)},bool,", flush=True)
+    sys.exit(0 if ok_all else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""E3 — Section 8.5 application stencils at |N| <= 1.
+
+hypterm / rhs4th3fort / derivative with the paper's long-shuffle
+restriction; checks shuffle counts match the published 12/48, 44/179,
+52/166.
+"""
+
+from __future__ import annotations
+
+from repro.core.frontend.kernelgen import APPLICATIONS, get_bench
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.synthesis.pipeline import ptxasw_kernel
+
+from .common import emit
+
+PAPER = {"hypterm": (12, 48), "rhs4th3fort": (44, 179),
+         "derivative": (52, 166)}
+
+
+def run() -> bool:
+    ok_all = True
+    for name in APPLICATIONS:
+        b = get_bench(name)
+        kernel = lower_to_ptx(b.program)
+        _, rep = ptxasw_kernel(kernel, max_delta=1)
+        d = rep.detection
+        want = PAPER[name]
+        ok = (d.n_shuffles, d.n_loads) == want
+        ok_all &= ok
+        emit(f"sec85.{name}.shuffles", d.n_shuffles, "count",
+             f"paper={want[0]} at |N|<=1")
+        emit(f"sec85.{name}.loads", d.n_loads, "count", f"paper={want[1]}")
+        emit(f"sec85.{name}.match", int(ok), "bool")
+    emit("sec85.ALL_MATCH", int(ok_all), "bool")
+    return ok_all

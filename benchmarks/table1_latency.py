@@ -1,0 +1,31 @@
+"""E4 — Table 1 latency inputs + per-op cycle-model microbenchmark.
+
+Table 1 itself is an *input* to the cycle model (we cannot measure GPU
+latencies here), so this benchmark (a) echoes the calibration, and
+(b) derives the paper's headline ratio — on which architectures a
+shuffle is cheaper than the cache hit it replaces — which drives every
+Figure 2 outcome.
+"""
+
+from __future__ import annotations
+
+from repro.core.emulator.cycles import LATENCY
+
+from .common import emit
+
+
+def run() -> bool:
+    ok = True
+    for arch, row in LATENCY.items():
+        emit(f"table1.{arch}.shuffle", row["shfl"], "cycles", "[16,33]")
+        emit(f"table1.{arch}.sm_read", row["sm"], "cycles")
+        emit(f"table1.{arch}.l1_hit", row["l1"], "cycles")
+        ratio = row["l1"] / row["shfl"]
+        emit(f"table1.{arch}.l1_over_shuffle", ratio, "x",
+             "paper: >1 => shuffle profitable as register cache")
+    # paper's reading: Maxwell/Pascal strongly favourable, Volta marginal
+    ok &= LATENCY["maxwell"]["l1"] / LATENCY["maxwell"]["shfl"] > 2
+    ok &= LATENCY["pascal"]["l1"] / LATENCY["pascal"]["shfl"] > 2
+    ok &= LATENCY["volta"]["l1"] / LATENCY["volta"]["shfl"] < 1.5
+    emit("table1.STRUCTURE_OK", int(ok), "bool")
+    return ok

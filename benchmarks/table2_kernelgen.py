@@ -1,0 +1,42 @@
+"""E1 — Table 2 reproduction: shuffle/load counts, deltas, analysis time.
+
+One row per KernelGen benchmark; asserts exact agreement with the
+paper's published Shuffle/Load and mean-|N| columns.
+"""
+
+from __future__ import annotations
+
+from repro.core.frontend.kernelgen import SUITE, all_benches
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.synthesis.pipeline import ptxasw_kernel
+
+from .common import emit
+
+
+def run() -> bool:
+    ok_all = True
+    for name, b in all_benches().items():
+        kernel = lower_to_ptx(b.program)
+        _, rep = ptxasw_kernel(kernel, max_delta=b.max_delta)
+        d = rep.detection
+        got = (d.n_shuffles, d.n_loads)
+        want = (b.expect_shuffles, b.expect_loads)
+        delta = d.mean_abs_delta
+        dok = (delta is None and b.expect_delta is None) or (
+            delta is not None and b.expect_delta is not None
+            and abs(delta - b.expect_delta) < 0.01)
+        ok = got == want and dok
+        ok_all &= ok
+        emit(f"table2.{name}.shuffles", d.n_shuffles, "count",
+             f"paper={b.expect_shuffles}")
+        emit(f"table2.{name}.loads", d.n_loads, "count",
+             f"paper={b.expect_loads}")
+        emit(f"table2.{name}.delta",
+             f"{delta:.2f}" if delta is not None else "-", "",
+             f"paper={b.expect_delta if b.expect_delta is not None else '-'}")
+        emit(f"table2.{name}.analysis_time", rep.total_time_s, "s",
+             "paper ran 3.3s-1m42s on i7-5930K")
+        emit(f"table2.{name}.match", int(ok), "bool")
+    emit("table2.ALL_MATCH", int(ok_all), "bool",
+         "16/16 rows match the paper")
+    return ok_all

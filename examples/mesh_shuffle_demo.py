@@ -1,0 +1,73 @@
+"""Example: the paper's shuffle at mesh granularity.
+
+Three demonstrations on a fake 8-device mesh (runs on CPU):
+
+1. ring attention — KV blocks rotate by ``ppermute`` (the inter-chip
+   ``shfl.up``) instead of being all-gathered; validated against dense
+   attention.
+2. MoE expert-parallel dispatch — tokens travel by ``all_to_all`` to
+   their expert's shard; validated against the dense one-hot oracle.
+3. int8-compressed cross-pod gradient reduce with error feedback.
+
+Run:  PYTHONPATH=src python examples/mesh_shuffle_demo.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import (ef_compressed_mean, pod_compressed_mean,
+                               ring_attention)
+from repro.launch.mesh import make_mesh
+from repro.models.attention import AttnConfig, naive_attention
+from repro.models.common import unbox
+from repro.models.moe import apply_moe_dense, apply_moe_sharded, init_moe
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # 1. ring attention
+    mesh = make_mesh((2, 4), ("data", "model"))
+    B, S, H, KV, Dh = 2, 64, 8, 4, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, Dh)), jnp.float32)
+    cfg = AttnConfig(d_model=H * Dh, n_heads=H, n_kv_heads=KV, head_dim=Dh,
+                     rope_theta=0, causal=True)
+    ref = naive_attention(q, k, v, cfg)
+    out = ring_attention(q, k, v, mesh, axis="model")
+    err = float(jnp.max(jnp.abs(out - ref)))
+    print(f"ring attention (ppermute KV rotation): max err {err:.2e}")
+    assert err < 1e-5
+
+    # 2. MoE all_to_all dispatch
+    E, k_top, D, F = 8, 2, 16, 32
+    params = unbox(init_moe(jax.random.PRNGKey(0), D, F, E, k_top))
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, D))
+    y_ref, _ = apply_moe_dense(params, x, k_top, E)
+    y_sh, _ = apply_moe_sharded(params, x, k_top, E, mesh,
+                                capacity_factor=float(E) / k_top)
+    err = float(jnp.max(jnp.abs(y_ref - y_sh)))
+    print(f"MoE all_to_all dispatch vs dense oracle: max err {err:.2e}")
+    assert err < 1e-5
+
+    # 3. compressed cross-pod gradient reduce
+    pmesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+    g = {"w": jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)}
+    gm = pod_compressed_mean(g, pmesh)
+    resid0 = jax.tree_util.tree_map(jnp.zeros_like, g)
+    gm2, resid = ef_compressed_mean(g, resid0, pmesh)
+    q_err = float(jnp.max(jnp.abs(gm["w"] - g["w"])))
+    print(f"int8 pod-reduce quantization error {q_err:.4f} "
+          f"(bound {float(jnp.max(jnp.abs(g['w'])))/127:.4f}); "
+          f"EF residual captured: {bool(jnp.max(jnp.abs(resid['w'])) > 0)}")
+    print("mesh_shuffle_demo OK")
+
+
+if __name__ == "__main__":
+    main()

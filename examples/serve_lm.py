@@ -1,0 +1,25 @@
+"""End-to-end example: batched serving with prefill + KV-cache decode.
+
+Serves the hybrid Zamba2 (SSM states + shared-attention KV cache) and a
+dense GQA model with batched greedy decoding — the exact code path the
+decode_32k / long_500k dry-run cells lower.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    for arch in ("zamba2-1.2b", "yi-9b"):
+        print(f"--- serving {arch} (reduced) ---")
+        res = serve_main(["--arch", arch, "--reduced", "--batch", "4",
+                          "--prompt-len", "32", "--gen", "12"])
+        assert res["tokens"].shape == (4, 12)
+    print("serve_lm OK")
+
+
+if __name__ == "__main__":
+    main()

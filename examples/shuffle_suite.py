@@ -1,0 +1,40 @@
+"""Example: run PTXASW over the full KernelGen suite (paper Table 2).
+
+Prints the reproduction table: shuffle/load counts, mean deltas,
+analysis times — all sixteen rows must match the paper, including the
+four negative results and their reasons.
+
+Run:  PYTHONPATH=src python examples/shuffle_suite.py
+"""
+
+from repro.core.frontend.kernelgen import all_benches
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.synthesis.pipeline import ptxasw_kernel
+
+
+def main():
+    print(f"{'name':<14}{'lang':<6}{'shuffle/load':<14}{'delta':<8}"
+          f"{'analysis':<10}{'paper':<12}match")
+    all_ok = True
+    for name, b in all_benches(include_apps=True).items():
+        kernel = lower_to_ptx(b.program)
+        _, rep = ptxasw_kernel(kernel, max_delta=b.max_delta)
+        d = rep.detection
+        delta = f"{d.mean_abs_delta:.2f}" if d.mean_abs_delta is not None else "-"
+        want_delta = (f"{b.expect_delta:.2f}"
+                      if b.expect_delta is not None else "-")
+        ok = (d.n_shuffles == b.expect_shuffles
+              and d.n_loads == b.expect_loads and delta == want_delta)
+        all_ok &= ok
+        note = f" ({b.note})" if b.note and not d.n_shuffles else ""
+        print(f"{name:<14}{b.program.lang:<6}"
+              f"{f'{d.n_shuffles}/{d.n_loads}':<14}{delta:<8}"
+              f"{rep.total_time_s:<10.3f}"
+              f"{f'{b.expect_shuffles}/{b.expect_loads}':<12}"
+              f"{'OK' if ok else 'MISMATCH'}{note}")
+    assert all_ok, "Table 2 mismatch"
+    print("\nshuffle_suite OK — 19/19 rows match the paper")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Model/config registry for the assigned architectures.
+
+Each architecture file registers one :class:`ModelConfig` with the exact
+published hyperparameters; ``reduced()`` derives the small same-family
+config used by CPU smoke tests (full configs are only ever touched by
+the compile-only dry-run via ShapeDtypeStructs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | vlm | ssm | hybrid | audio
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    norm: str = "rmsnorm"          # rmsnorm | layernorm | nonparametric
+    mlp: str = "swiglu"            # swiglu | gelu
+    rope_theta: float = 1e4
+    tie_embeddings: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    moe_top_k: int = 0
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    ssm_chunk: int = 256
+    attn_every: int = 6            # hybrid: shared attn block per N ssm blocks
+    # --- VLM ---
+    cross_every: int = 0           # a cross-attn layer every N layers
+    n_media_tokens: int = 1600     # stub vision tokens (frontend is a stub)
+    # --- audio enc-dec ---
+    n_encoder_layers: int = 0
+    n_frames: int = 1024           # stub speech-frame embeddings
+    # --- compute policy ---
+    dtype: str = "bfloat16"        # params/activations for dry-run & roofline
+    attn_impl: str = "blockwise"
+    q_block: int = 512
+    kv_block: int = 1024
+    moe_impl: str = "sharded"      # sharded | dense (smoke/reference)
+    moe_schedule: str = "2d"       # 2d | ep_tp | auto  (§Perf hillclimb)
+    ssm_mm_dtype: str = "float32"  # float32 | compute  (§Perf hillclimb)
+    norm_impl: str = "lean"        # lean | f32 stats   (§Perf hillclimb)
+    pad_vocab_multiple: int = 128  # pad embedding rows to a lane multiple
+                                   # so vocab shards over the tensor axis
+                                   # (§Perf hillclimb; 128 in production)
+    remat: str = "block"           # none | block  (activation checkpointing)
+    scan_layers: bool = True
+    # notes for DESIGN/EXPERIMENTS
+    source: str = ""
+    notes: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        m = max(self.pad_vocab_multiple, 1)
+        return -(-self.vocab // m) * m
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when 500k-token decode is feasible (SSM/hybrid state)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_decoder(self) -> bool:
+        return True   # all assigned archs decode (enc-dec decodes too)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    # import side-effect registration
+    from repro import configs as _c  # noqa: F401
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    from repro import configs as _c  # noqa: F401
+    return dict(_REGISTRY)
+
+
+def reduced(cfg: ModelConfig) -> ModelConfig:
+    """Small same-family config for CPU smoke tests."""
+    kw = dict(
+        n_layers=min(cfg.n_layers, 2),
+        d_model=64,
+        vocab=256,
+        dtype="float32",
+        ssm_chunk=16,
+        q_block=16,
+        kv_block=16,
+        n_media_tokens=8,
+        n_frames=8,
+        moe_impl="dense",
+        remat="none",
+    )
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv_heads=max(1, 4 * cfg.n_kv_heads // cfg.n_heads),
+                  d_ff=128)
+    if cfg.n_experts:
+        kw.update(n_experts=4, moe_top_k=min(2, cfg.moe_top_k))
+    if cfg.ssm_state:
+        kw.update(ssm_state=16, ssm_head_dim=16, attn_every=2)
+    if cfg.cross_every:
+        kw.update(cross_every=2, n_layers=4)
+    if cfg.n_encoder_layers:
+        kw.update(n_encoder_layers=2)
+    return cfg.replace(**kw)
+
+
+# --------------------------------------------------------------------------
+# input shapes (assignment: 4 shapes x 10 archs = 40 cells)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a valid dry-run cell, and why not if not."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 512k dense-attention decode "
+                       "is out of scope per assignment (sub-quadratic only)")
+    return True, ""

@@ -1,0 +1,32 @@
+"""Mamba2-1.3B — SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060; unverified]  48L d_model=2048 d_ff=0 vocab=50280,
+ssm_state=128; d_inner = 2*d_model = 4096, head_dim 64 -> 64 heads.
+
+This is the architecture where the paper's shuffle synthesis applies
+most directly: the width-4 depthwise causal conv1d is a sequence
+stencil served by the Pallas shuffle-reuse kernel
+(repro.kernels.conv1d), with deltas found by the PTXASW analysis.
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    conv_width=4,
+    norm="rmsnorm",
+    rope_theta=0.0,
+    ssm_mm_dtype="compute",
+    source="arXiv:2405.21060",
+    notes="attention-free; long_500k runs (O(1) decode state)",
+))

@@ -1,0 +1,24 @@
+"""StarCoder2-3B — GQA kv=2, RoPE, GELU FFN.  [arXiv:2402.19173; hf]
+
+30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152.
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="starcoder2-3b",
+    family="dense",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    d_ff=12288,
+    vocab=49152,
+    norm="layernorm",
+    mlp="gelu",
+    rope_theta=1e5,
+    attn_impl="ring",   # heads=24, kv=2 cannot shard over a 16-wide tensor axis;
+                        # ring (sequence-parallel) attention shards S instead
+                        # (§Perf: prefill compute 64.8s -> 4.2s, memory 20x down)
+    source="arXiv:2402.19173",
+))

@@ -1,0 +1,85 @@
+"""Latency cycle model calibrated on the paper's Table 1.
+
+Substitutes for wall-clock GPU runs in this environment: the concrete
+warp emulator (:mod:`repro.core.emulator.concrete`) produces executed-
+event counts per kernel version (Original / NO LOAD / NO CORNER /
+PTXASW), and this model weights them with the per-architecture
+latencies the paper reports (Table 1 [16, 33]) to reproduce the
+*structure* of Figure 2: which versions win on which generation, and
+why (Section 8's analysis: Maxwell/Pascal have L1-hit latencies ~2.5x
+the shuffle latency, Kepler/Volta do not).
+
+This is a latency-weighted throughput model, not a simulator: each
+event class contributes its latency divided by the architecture's
+ability to hide it (ILP slots); numbers are meaningful as *ratios*
+between versions on one architecture, exactly how the paper uses
+Figure 2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from .concrete import RunStats
+
+# Table 1 of the paper (clock cycles)
+LATENCY = {
+    #            shuffle  sm_read  l1_hit
+    "kepler":  dict(shfl=24, sm=26, l1=35),
+    "maxwell": dict(shfl=33, sm=23, l1=82),
+    "pascal":  dict(shfl=33, sm=24, l1=82),
+    "volta":   dict(shfl=22, sm=19, l1=28),
+}
+
+# issue-side costs (cycles per executed instruction), common across gens.
+# ALU is dual-issue (0.5 cyc/instr effective); FP32 pipes are modeled at
+# 1 cyc/instr with dependency stalls folded into the latency terms.
+ALU_COST = 0.5
+FALU_COST = 1.0
+BRANCH_COST = 2.0
+PRED_OFF_COST = 0.25       # issued-but-masked slot
+
+# memory-level parallelism: how many outstanding loads an SM overlaps.
+# Volta's scheduler hides more latency (Section 8.4: "minimal latency at
+# each operation"); Kepler the least (Section 8.1: long execution
+# dependencies).
+MLP = {"kepler": 4.0, "maxwell": 6.0, "pascal": 6.0, "volta": 8.0}
+
+
+@dataclasses.dataclass
+class CycleReport:
+    arch: str
+    cycles: float
+    breakdown: Dict[str, float]
+
+
+def estimate_cycles(stats: RunStats, arch: str) -> CycleReport:
+    lat = LATENCY[arch]
+    mlp = MLP[arch]
+    counts = stats.counts
+    br: Dict[str, float] = {}
+    br["load_global"] = counts.get("load_global", 0) * lat["l1"] / mlp
+    br["load_shared"] = counts.get("load_shared", 0) * lat["sm"] / mlp
+    br["store"] = (counts.get("store_global", 0)
+                   + counts.get("store_shared", 0)) * lat["l1"] / mlp
+    # shuffles serialize with their consumers (execution dependency,
+    # Section 8.1) — hidden less well than loads
+    br["shfl"] = counts.get("shfl", 0) * lat["shfl"] / min(mlp, 4.0)
+    br["alu"] = counts.get("alu", 0) * ALU_COST
+    br["falu"] = counts.get("falu", 0) * FALU_COST
+    br["branch"] = counts.get("branch", 0) * BRANCH_COST
+    br["pred_off"] = counts.get("pred_off", 0) * PRED_OFF_COST
+    return CycleReport(arch=arch, cycles=sum(br.values()), breakdown=br)
+
+
+def speedup_table(stats_by_version: Dict[str, RunStats]) -> Dict[str, Dict[str, float]]:
+    """Figure-2-style table: arch -> version -> speedup vs original."""
+    out: Dict[str, Dict[str, float]] = {}
+    for arch in LATENCY:
+        base = estimate_cycles(stats_by_version["original"], arch).cycles
+        out[arch] = {
+            version: base / estimate_cycles(stats, arch).cycles
+            for version, stats in stats_by_version.items()
+        }
+    return out

@@ -1,0 +1,590 @@
+"""The symbolic PTX emulator (paper Section 4).
+
+Each register holds a concolic :class:`~repro.core.symbolic.Term`; predicate
+registers hold :class:`BoolExpr`.  Branching duplicates the register
+environment; branch predicates are recorded into an
+:class:`~repro.core.symbolic.AssumptionSet` which prunes unrealizable paths
+(the Z3 role).  Loop iterators are abstracted to uninterpreted functions at
+the loop-header entry with their initial value clipped out and re-added
+(Section 4.2, induction-variable recognition); flows finish at re-entry to
+iterative blocks, at ``ret``/``exit``, or when a block entry repeats an
+already-seen register environment (memoization).
+"""
+
+from __future__ import annotations
+
+import itertools
+import struct
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..ptx.ir import (
+    Imm,
+    Instr,
+    Kernel,
+    Label,
+    LabelRef,
+    MemRef,
+    Reg,
+    SPECIAL_REGS,
+    TYPE_WIDTH,
+)
+from ..symbolic import (
+    AssumptionSet,
+    BoolConst,
+    BoolExpr,
+    Cmp,
+    FALSE,
+    Sym,
+    Term,
+    TRUE,
+    bool_and,
+    bool_not,
+    bool_or,
+    bool_xor,
+)
+from .trace import FlowResult, LoadEvent, StoreEvent
+
+_flow_counter = itertools.count()
+_uf_counter = itertools.count(0x1000)
+
+_INT_TYPES = {"b8", "b16", "b32", "b64", "s8", "s16", "s32", "s64",
+              "u8", "u16", "u32", "u64"}
+_FLOAT_TYPES = {"f16", "f32", "f64"}
+_CMP_MAP = {
+    # signed / generic
+    "eq": ("eq", True), "ne": ("ne", True),
+    "lt": ("lt", True), "le": ("le", True),
+    "gt": ("gt", True), "ge": ("ge", True),
+    # unsigned
+    "lo": ("lt", False), "ls": ("le", False),
+    "hi": ("gt", False), "hs": ("ge", False),
+    "ltu": ("lt", False), "leu": ("le", False),
+    "gtu": ("gt", False), "geu": ("ge", False),
+    "equ": ("eq", False), "neu": ("ne", False),
+}
+_ROUND_MODS = {"rn", "rz", "rm", "rp", "ru", "rd", "ftz", "sat", "approx",
+               "full", "lo", "hi", "wide", "nc", "volatile", "relaxed", "sync",
+               "uni", "to", "cta", "gpu", "sys", "aligned"}
+
+
+@dataclass
+class _Flow:
+    pc: int
+    regs: Dict[str, Term]
+    preds: Dict[str, BoolExpr]
+    assumptions: AssumptionSet
+    trace: List[object]
+    flow_id: int = field(default_factory=lambda: next(_flow_counter))
+    entered_headers: Set[int] = field(default_factory=set)
+
+    def fork(self) -> "_Flow":
+        return _Flow(
+            pc=self.pc,
+            regs=dict(self.regs),
+            preds=dict(self.preds),
+            assumptions=self.assumptions.copy(),
+            trace=list(self.trace),
+            entered_headers=set(self.entered_headers),
+        )
+
+
+class SymbolicEmulator:
+    """Emulates one PTX kernel over symbolic inputs."""
+
+    def __init__(self, kernel: Kernel, max_flows: int = 256,
+                 max_steps: int = 200_000) -> None:
+        self.kernel = kernel
+        self.max_flows = max_flows
+        self.max_steps = max_steps
+        kernel.renumber()
+        self.labels = kernel.labels()
+        self._analyze_cfg()
+
+    # ------------------------------------------------------------------
+    # static pre-analysis: basic blocks, loop headers, loop-written regs
+    # ------------------------------------------------------------------
+    def _analyze_cfg(self) -> None:
+        body = self.kernel.body
+        # basic-block ids: a new block starts at every label and after
+        # every branch instruction.
+        self.block_of: List[int] = []
+        block = 0
+        for stmt in body:
+            if isinstance(stmt, Label):
+                block += 1
+            self.block_of.append(block)
+            if isinstance(stmt, Instr) and stmt.base in ("bra", "ret", "exit"):
+                block += 1
+        # loop headers: targets of backward branches
+        self.loop_written: Dict[int, Set[str]] = {}
+        for i, stmt in enumerate(body):
+            if isinstance(stmt, Instr) and stmt.base == "bra":
+                target = stmt.operands[0]
+                if isinstance(target, LabelRef) and target.name in self.labels:
+                    t = self.labels[target.name]
+                    if t <= i:  # back-edge
+                        written = self.loop_written.setdefault(t, set())
+                        for j in range(t, i + 1):
+                            s = body[j]
+                            if isinstance(s, Instr):
+                                written.update(self._dsts(s))
+
+    @staticmethod
+    def _dsts(instr: Instr) -> List[str]:
+        base = instr.base
+        if base in ("st", "bra", "ret", "exit", "bar", "membar"):
+            return []
+        out = []
+        if instr.operands and isinstance(instr.operands[0], Reg):
+            out.append(instr.operands[0].name)
+        # dual-destination forms (shfl.sync %d|%p, setp %p|%q)
+        if base in ("shfl", "setp") and len(instr.operands) > 1 \
+                and isinstance(instr.operands[1], Reg) \
+                and instr.operands[1].name.startswith("%") \
+                and instr.parts[0] == "shfl":
+            out.append(instr.operands[1].name)
+        return out
+
+    # ------------------------------------------------------------------
+    # operand access
+    # ------------------------------------------------------------------
+    def _read(self, flow: _Flow, op, width: int) -> Term:
+        if isinstance(op, Imm):
+            return Term.const_(op.value, width)
+        if isinstance(op, Reg):
+            name = op.name
+            if name in SPECIAL_REGS:
+                if name == "WARP_SZ":
+                    return Term.const_(32, width)
+                return Term.sym(name.lstrip("%"), width)
+            if name in flow.regs:
+                t = flow.regs[name]
+                if t.width != width:
+                    return t.resize(width, signed=True)
+                return t
+            if name in flow.preds:
+                return self._bool_to_term(flow.preds[name], width)
+            # parameter referenced directly by name
+            ptype = self.kernel.param_type(name)
+            if ptype is not None:
+                return Term.sym(f"param:{name}", TYPE_WIDTH[ptype]).resize(width, True)
+            # read-before-write: give it a stable fresh symbol
+            t = Term.sym(f"undef:{name}", width)
+            flow.regs[name] = t
+            return t
+        raise TypeError(f"cannot read operand {op!r}")
+
+    def _read_pred(self, flow: _Flow, name: str) -> BoolExpr:
+        if name in flow.preds:
+            return flow.preds[name]
+        expr = Cmp("ne", Term.uf("predin", (Term.sym(f"undef:{name}", 32),), 32),
+                   Term.const_(0, 32))
+        flow.preds[name] = expr
+        return expr
+
+    @staticmethod
+    def _bool_to_term(expr: BoolExpr, width: int) -> Term:
+        if isinstance(expr, BoolConst):
+            return Term.const_(1 if expr.value else 0, width)
+        key = Term.const_(abs(hash(expr)) & 0xFFFFFFFF, 32)
+        return Term.uf("b2i", (key,), width)
+
+    def _write(self, flow: _Flow, op, value: Term) -> None:
+        assert isinstance(op, Reg)
+        flow.regs[op.name] = value
+        flow.preds.pop(op.name, None)
+
+    def _write_pred(self, flow: _Flow, op, expr: BoolExpr) -> None:
+        assert isinstance(op, Reg)
+        flow.preds[op.name] = expr
+        flow.regs.pop(op.name, None)
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+    def run(self) -> List[FlowResult]:
+        init = _Flow(pc=0, regs={}, preds={},
+                     assumptions=AssumptionSet(), trace=[])
+        worklist: List[_Flow] = [init]
+        results: List[FlowResult] = []
+        seen_entries: Set[Tuple[int, frozenset]] = set()
+        steps = 0
+
+        while worklist:
+            flow = worklist.pop()
+            status = "ret"
+            while flow.pc < len(self.kernel.body):
+                steps += 1
+                if steps > self.max_steps:
+                    status = "limit"
+                    break
+                stmt = self.kernel.body[flow.pc]
+                if isinstance(stmt, Label):
+                    uid = stmt.uid
+                    if uid in self.loop_written:
+                        if uid in flow.entered_headers:
+                            status = "backedge"
+                            break
+                        flow.entered_headers.add(uid)
+                        self._abstract_loop(flow, uid)
+                    # memoization of block entries (Section 4.2)
+                    sig = self._env_signature(flow)
+                    key = (uid, sig)
+                    if key in seen_entries:
+                        status = "memo"
+                        break
+                    seen_entries.add(key)
+                    flow.pc += 1
+                    continue
+
+                instr = stmt
+                # predicated execution
+                guard: Optional[BoolExpr] = None
+                if instr.pred is not None:
+                    neg, pname = instr.pred
+                    guard = self._read_pred(flow, pname)
+                    if neg:
+                        guard = bool_not(guard)
+                    implied = flow.assumptions.implied(guard)
+                    if implied is False:
+                        flow.pc += 1
+                        continue
+                    if implied is True:
+                        guard = None
+
+                if instr.base == "bra":
+                    next_flows = self._exec_branch(flow, instr, guard)
+                    if next_flows is None:      # pruned / done
+                        status = "pruned"
+                        break
+                    if len(next_flows) == 2 and len(worklist) + len(results) < self.max_flows:
+                        worklist.append(next_flows[1])
+                    flow = next_flows[0]
+                    continue
+                if instr.base in ("ret", "exit"):
+                    status = "ret"
+                    break
+
+                self._exec(flow, instr, guard)
+                flow.pc += 1
+
+            results.append(FlowResult(flow_id=flow.flow_id, trace=flow.trace,
+                                      assumptions=flow.assumptions,
+                                      terminated=status))
+        return results
+
+    # ------------------------------------------------------------------
+    def _env_signature(self, flow: _Flow) -> frozenset:
+        items = [("r", n, v) for n, v in flow.regs.items()]
+        items += [("p", n, e) for n, e in flow.preds.items()]
+        return frozenset(items) | flow.assumptions.signature()
+
+    def _abstract_loop(self, flow: _Flow, header_uid: int) -> None:
+        """Clip initial values, add unique loop UFs (Section 4.2)."""
+        for reg in sorted(self.loop_written.get(header_uid, ())):
+            if reg in flow.regs:
+                init = flow.regs[reg]
+                it = Term.uf("loop", (Term.const_(next(_uf_counter), 32),),
+                             init.width)
+                flow.regs[reg] = init.add(it)
+            elif reg in flow.preds:
+                flow.preds[reg] = Cmp(
+                    "ne",
+                    Term.uf("loopp", (Term.const_(next(_uf_counter), 32),), 32),
+                    Term.const_(0, 32),
+                )
+
+    # ------------------------------------------------------------------
+    def _exec_branch(self, flow: _Flow, instr: Instr,
+                     guard: Optional[BoolExpr]) -> Optional[List[_Flow]]:
+        target_op = instr.operands[0]
+        assert isinstance(target_op, LabelRef)
+        target = self.labels.get(target_op.name)
+        if target is None:
+            flow.pc += 1
+            return [flow]
+        if guard is None:
+            flow.pc = target
+            return [flow]
+        # fork: taken (assume guard) and fallthrough (assume !guard)
+        taken = flow.fork()
+        ok_taken = taken.assumptions.add(guard)
+        taken.pc = target
+        ok_fall = flow.assumptions.add(bool_not(guard))
+        flow.pc += 1
+        out: List[_Flow] = []
+        if ok_taken:
+            out.append(taken)
+        if ok_fall:
+            out.append(flow)
+        if not out:
+            return None
+        return out
+
+    # ------------------------------------------------------------------
+    # instruction semantics
+    # ------------------------------------------------------------------
+    def _exec(self, flow: _Flow, instr: Instr, guard: Optional[BoolExpr]) -> None:
+        base = instr.base
+        parts = instr.parts
+        tsuf = instr.type_suffix()
+        width = TYPE_WIDTH.get(tsuf, 32)
+
+        if base == "ld":
+            self._exec_ld(flow, instr, guard, parts, tsuf, width)
+        elif base == "st":
+            self._exec_st(flow, instr, parts, tsuf, width)
+        elif base == "mov":
+            if tsuf == "pred":
+                src = instr.operands[1]
+                self._write_pred(flow, instr.operands[0],
+                                 self._read_pred(flow, src.name)
+                                 if isinstance(src, Reg) else TRUE)
+            else:
+                val = self._read(flow, instr.operands[1], width)
+                self._store_result(flow, instr.operands[0], val, guard)
+        elif base == "setp":
+            self._exec_setp(flow, instr, parts, tsuf, width)
+        elif base == "selp":
+            d, a, b, p = instr.operands
+            cond = self._read_pred(flow, p.name)
+            implied = flow.assumptions.implied(cond)
+            if implied is True:
+                val = self._read(flow, a, width)
+            elif implied is False:
+                val = self._read(flow, b, width)
+            else:
+                val = Term.uf("ite", (self._bool_to_term(cond, 32),
+                                      self._read(flow, a, width),
+                                      self._read(flow, b, width)), width)
+            self._store_result(flow, d, val, guard)
+        elif base in ("cvta",):
+            val = self._read(flow, instr.operands[1], width)
+            self._store_result(flow, instr.operands[0], val, guard)
+        elif base == "cvt":
+            self._exec_cvt(flow, instr, parts, guard)
+        elif base in ("and", "or", "xor", "not") and tsuf == "pred":
+            ops = instr.operands
+            if base == "not":
+                e = bool_not(self._read_pred(flow, ops[1].name))
+            else:
+                a = self._read_pred(flow, ops[1].name)
+                b = self._read_pred(flow, ops[2].name)
+                e = {"and": bool_and, "or": bool_or, "xor": bool_xor}[base](a, b)
+            self._write_pred(flow, ops[0], e)
+        elif tsuf in _FLOAT_TYPES and base in (
+                "add", "sub", "mul", "div", "fma", "mad", "neg", "abs",
+                "min", "max", "sqrt", "rsqrt", "rcp", "sin", "cos", "lg2",
+                "ex2", "tanh", "copysign"):
+            args = tuple(self._read(flow, o, width) for o in instr.operands[1:])
+            if base in ("add", "mul", "min", "max") and len(args) == 2:
+                ka = (args[0].const, tuple(sorted(x.uid for x in args[0].coeffs)))
+                kb = (args[1].const, tuple(sorted(x.uid for x in args[1].coeffs)))
+                if kb < ka:
+                    args = (args[1], args[0])
+            val = Term.uf(f"f{base}.{tsuf}", args, width)
+            self._store_result(flow, instr.operands[0], val, guard)
+        elif base in ("add", "sub", "mul", "mad", "div", "rem", "min", "max",
+                      "neg", "abs", "shl", "shr", "and", "or", "xor", "not",
+                      "popc", "clz", "brev", "bfind"):
+            self._exec_int(flow, instr, parts, tsuf, width, guard)
+        elif base == "shfl":
+            d = instr.operands[0]
+            rest = instr.operands[1:]
+            pred_dst = None
+            if len(rest) >= 5:  # %d|%p form parsed into two regs
+                pred_dst, rest = rest[0], rest[1:]
+            args = tuple(self._read(flow, o, 32) for o in rest[:2])
+            val = Term.uf(f"shfl.{parts[2] if len(parts) > 2 else 'idx'}",
+                          args + (Term.const_(next(_uf_counter), 32),), 32)
+            self._store_result(flow, d, val, guard)
+            if pred_dst is not None and isinstance(pred_dst, Reg) \
+                    and self.kernel.reg_type(pred_dst.name) == "pred":
+                self._write_pred(flow, pred_dst, Cmp(
+                    "ne", Term.uf("shflp", (val,), 32), Term.const_(0, 32)))
+        elif base == "activemask":
+            val = Term.uf("activemask", (Term.const_(instr.uid, 32),), 32)
+            self._store_result(flow, instr.operands[0], val, guard)
+        elif base in ("bar", "membar", "fence"):
+            pass
+        else:
+            # unknown op: opaque result if it has a register destination
+            if instr.operands and isinstance(instr.operands[0], Reg):
+                args = tuple(self._read(flow, o, width)
+                             for o in instr.operands[1:]
+                             if isinstance(o, (Reg, Imm)))
+                self._store_result(
+                    flow, instr.operands[0],
+                    Term.uf(instr.opcode, args +
+                            (Term.const_(next(_uf_counter), 32),), width),
+                    guard)
+
+    # ------------------------------------------------------------------
+    def _store_result(self, flow: _Flow, dst, value: Term,
+                      guard: Optional[BoolExpr]) -> None:
+        if guard is not None and isinstance(dst, Reg):
+            old = flow.regs.get(dst.name)
+            if old is None:
+                old = Term.sym(f"undef:{dst.name}", value.width)
+            value = Term.uf("ite", (self._bool_to_term(guard, 32), value,
+                                    old.resize(value.width, True)), value.width)
+        self._write(flow, dst, value)
+
+    def _mem_addr(self, flow: _Flow, ref: MemRef) -> Term:
+        base = ref.base
+        ptype = self.kernel.param_type(base)
+        if ptype is not None:
+            t = Term.sym(f"param:{base}", TYPE_WIDTH[ptype])
+        else:
+            t = self._read(flow, Reg(base), 64)
+        if t.width != 64:
+            t = t.resize(64, signed=False)
+        return t.add(Term.const_(ref.offset, 64))
+
+    def _exec_ld(self, flow: _Flow, instr: Instr, guard: Optional[BoolExpr],
+                 parts, tsuf, width) -> None:
+        space = "global"
+        for p in parts[1:]:
+            if p in ("param", "global", "shared", "local", "const"):
+                space = p
+        nc = "nc" in parts
+        dst, ref = instr.operands[0], instr.operands[1]
+        assert isinstance(ref, MemRef)
+        if space == "param":
+            val = Term.sym(f"param:{ref.base}", width)
+            self._store_result(flow, dst, val, guard)
+            return
+        addr = self._mem_addr(flow, ref)
+        # load value: UF over (address, store-epoch) for non-.nc loads
+        epoch = sum(1 for e in flow.trace if isinstance(e, StoreEvent)
+                    and e.space == space)
+        args = (addr,) if nc else (addr, Term.const_(epoch, 32))
+        val = Term.uf(f"load.{space}.{tsuf}", args, width)
+        event = LoadEvent(
+            stmt_uid=instr.uid, space=space, nc=nc, addr=addr, width=width,
+            value=val, block=self.block_of[instr.uid], order=len(flow.trace),
+            guarded=guard is not None,
+        )
+        flow.trace.append(event)
+        self._store_result(flow, dst, val, guard)
+
+    def _exec_st(self, flow: _Flow, instr: Instr, parts, tsuf, width) -> None:
+        space = "global"
+        for p in parts[1:]:
+            if p in ("global", "shared", "local"):
+                space = p
+        ref, src = instr.operands[0], instr.operands[1]
+        assert isinstance(ref, MemRef)
+        addr = self._mem_addr(flow, ref)
+        val = self._read(flow, src, width)
+        from ..symbolic.solver import may_alias
+        for e in flow.trace:
+            if isinstance(e, LoadEvent) and e.space == space and not e.nc \
+                    and may_alias(addr, e.addr):
+                e.invalidated = True
+        flow.trace.append(StoreEvent(
+            stmt_uid=instr.uid, space=space, addr=addr, width=width,
+            value=val, block=self.block_of[instr.uid], order=len(flow.trace)))
+
+    def _exec_setp(self, flow: _Flow, instr: Instr, parts, tsuf, width) -> None:
+        cmp_op = parts[1]
+        rel, signed = _CMP_MAP.get(cmp_op, ("eq", True))
+        if tsuf in _INT_TYPES or tsuf is None:
+            if tsuf and tsuf.startswith("u") or tsuf and tsuf.startswith("b"):
+                signed = signed and rel in ("eq", "ne")
+            a = self._read(flow, instr.operands[1], width)
+            b = self._read(flow, instr.operands[2], width)
+            expr: BoolExpr = Cmp(rel, a, b, signed=signed)
+        else:
+            # float compare: opaque (NaN-sound) — UF per comparison
+            a = self._read(flow, instr.operands[1], width)
+            b = self._read(flow, instr.operands[2], width)
+            t = Term.uf(f"fcmp.{cmp_op}.{tsuf}", (a, b), 32)
+            expr = Cmp("ne", t, Term.const_(0, 32))
+        cv = expr.eval_const() if isinstance(expr, Cmp) else None
+        if cv is not None:
+            expr = TRUE if cv else FALSE
+        self._write_pred(flow, instr.operands[0], expr)
+
+    def _exec_cvt(self, flow: _Flow, instr: Instr, parts, guard) -> None:
+        types = [p for p in parts[1:] if p in TYPE_WIDTH]
+        if len(types) < 2:
+            types = ["b32", "b32"]
+        to_t, from_t = types[0], types[1]
+        src = self._read(flow, instr.operands[1], TYPE_WIDTH[from_t])
+        if to_t in _FLOAT_TYPES or from_t in _FLOAT_TYPES:
+            val = Term.uf(f"cvt.{to_t}.{from_t}", (src,), TYPE_WIDTH[to_t])
+        else:
+            val = src.resize(TYPE_WIDTH[to_t], signed=from_t.startswith("s"))
+        self._store_result(flow, instr.operands[0], val, guard)
+
+    def _exec_int(self, flow: _Flow, instr: Instr, parts, tsuf, width,
+                  guard) -> None:
+        base = instr.base
+        signed = bool(tsuf) and tsuf.startswith("s")
+        ops = instr.operands
+        wide = "wide" in parts
+        hi = "hi" in parts
+        if base in ("neg", "abs", "not", "popc", "clz", "brev", "bfind"):
+            a = self._read(flow, ops[1], width)
+            if base == "neg":
+                val = a.neg()
+            elif base == "not":
+                val = a.not_()
+            elif base == "abs":
+                if a.signed_const is not None:
+                    val = Term.const_(abs(a.signed_const), width)
+                else:
+                    val = Term.uf("abs", (a,), width)
+            else:
+                val = Term.uf(base, (a,), width)
+            self._store_result(flow, ops[0], val, guard)
+            return
+        # ``.wide`` ops: the type suffix names the *source* type; the
+        # destination is twice as wide (e.g. mul.wide.s32 -> 64-bit dst).
+        src_width = width
+        if wide:
+            width = width * 2
+        a = self._read(flow, ops[1], src_width)
+        b = self._read(flow, ops[2], src_width)
+        if wide:
+            a = a.resize(width, signed)
+            b = b.resize(width, signed)
+        if base == "add":
+            val = a.add(b)
+        elif base == "sub":
+            val = a.sub(b)
+        elif base == "mul":
+            if hi:
+                val = Term.uf("mulhi", (a, b), width)
+            else:
+                val = a.mul(b)
+        elif base == "mad":
+            c = self._read(flow, ops[3], width)
+            val = a.mul(b).add(c)
+        elif base == "div":
+            val = a.div(b, signed)
+        elif base == "rem":
+            val = a.rem(b, signed)
+        elif base == "min":
+            val = a.min_(b, signed)
+        elif base == "max":
+            val = a.max_(b, signed)
+        elif base == "shl":
+            val = a.shl(b)
+        elif base == "shr":
+            val = a.shr(b, signed)
+        elif base == "and":
+            val = a.and_(b)
+        elif base == "or":
+            val = a.or_(b)
+        elif base == "xor":
+            val = a.xor_(b)
+        else:
+            val = Term.uf(base, (a, b), width)
+        self._store_result(flow, ops[0], val, guard)
+
+
+def emulate(kernel: Kernel, **kw) -> List[FlowResult]:
+    return SymbolicEmulator(kernel, **kw).run()

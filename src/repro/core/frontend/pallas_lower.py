@@ -1,0 +1,88 @@
+"""PTXASW detection -> Pallas fetch plan (the TPU shuffle synthesis).
+
+This is the bridge between the paper-faithful pipeline (PTX symbolic
+emulation, Section 4-5) and the TPU-native kernel: the *same* detection
+result that drives ``shfl.sync`` insertion on the GPU path selects which
+taps of the Pallas stencil kernel are served from a shared VMEM row
+fetch (static lane-shifted slices) instead of separate HBM fetches.
+
+The invariant checked here — and property-tested in
+``tests/test_kernels.py`` — is that the emulator's shuffle pairs
+and the geometric row plan agree: every load PTXASW covers with a
+``shfl`` of delta N maps to a tap served at slice offset N of its row's
+fetch, and the uncovered loads are exactly the fetch sources/singletons.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.emulator.machine import emulate
+from repro.core.frontend.stencil import Program, lower_to_ptx
+from repro.core.synthesis.detect import DetectionResult, detect
+from repro.kernels.stencil.stencil import FetchPlan, make_plan
+
+
+@dataclass
+class TpuShufflePlan:
+    """Joint result: PTX-level detection + TPU-level fetch plan."""
+
+    program: Program
+    detection: DetectionResult
+    plan: FetchPlan
+    n_taps: int                 # unique static taps
+    n_row_covered: int          # taps served from a shared row fetch
+    consistent: bool            # detection pairs == row-coverable taps
+
+    @property
+    def n_shuffles(self) -> int:
+        return self.detection.n_shuffles
+
+
+def synthesize_tpu(prog: Program, max_delta: int = 31) -> TpuShufflePlan:
+    """Run the full paper pipeline on the program's PTX lowering, then
+    derive the detection-guided Pallas plan and cross-check them."""
+    kernel = lower_to_ptx(prog)
+    flows = emulate(kernel)
+    detection = detect(kernel, flows, max_delta=max_delta)
+    try:
+        plan = make_plan(prog, "paper")
+    except ValueError:
+        # loop-carried (Reduce) loads: no stencil geometry — these are the
+        # paper's negative cases (matmul/matvec); detection must agree.
+        assert detection.n_shuffles == 0, (
+            "emulator found shuffles a non-stencil program cannot serve")
+        return TpuShufflePlan(program=prog, detection=detection,
+                              plan=FetchPlan("paper", []),
+                              n_taps=0, n_row_covered=0, consistent=True)
+
+    n_taps = sum(len(f.taps) for f in plan.fetches)
+    # Geometric "row-coverable" loads, mirroring the detector's greedy
+    # chaining rule exactly: taps are visited in ascending lane order; a
+    # tap is covered iff some *uncovered* earlier tap of the same row
+    # lies within the delta bound (a covered tap never sources another —
+    # paper: "no shuffles over shuffled elements").
+    n_row_covered = 0
+    for f in plan.fetches:
+        lanes = sorted(o[0] for o in f.taps)
+        uncovered: List[int] = []
+        for li in lanes:
+            if any(abs(li - s) <= max_delta for s in uncovered):
+                n_row_covered += 1
+            else:
+                uncovered.append(li)
+
+    # Consistency: the emulator may additionally find duplicate-address
+    # (delta=0) pairs that geometry de-duplicates, so detection can only
+    # exceed the geometric count by the number of delta-0 pairs.
+    n_zero = sum(1 for p in detection.pairs if p.delta == 0)
+    consistent = (detection.n_shuffles - n_zero) == n_row_covered
+    return TpuShufflePlan(
+        program=prog,
+        detection=detection,
+        plan=plan,
+        n_taps=n_taps,
+        n_row_covered=n_row_covered,
+        consistent=consistent,
+    )

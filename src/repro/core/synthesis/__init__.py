@@ -1,0 +1,3 @@
+from .detect import DetectionResult, ShufflePair, detect  # noqa: F401
+from .codegen import MODES, synthesize  # noqa: F401
+from .pipeline import KernelReport, ptxasw, ptxasw_kernel  # noqa: F401

@@ -1,0 +1,123 @@
+"""Shuffle code generation (paper Section 5.2, Listing 6).
+
+Rewrites the kernel body:
+
+* prologue (shared among shuffles): ``%wid = %tid.x % 32``
+* after each source load: ``mov`` capturing the loaded value
+* each covered load is replaced by::
+
+      activemask.b32 %m;
+      setp.ne.s32  %incomplete, %m, -1;
+      setp.lt.u32  %oor, %wid, |N|;          (.up;  .down uses gt, 31-N)
+      or.pred      %pred, %incomplete, %oor;
+      shfl.sync.up.b32 %dst, %src, |N|, 0, %m;
+      @%pred ld.global... %dst, [addr];      (corner cases only)
+
+  ``N = 0`` degenerates to a plain ``mov`` (no shuffle).
+
+Modes reproduce the paper's ablations: ``ptxasw`` (full), ``nocorner``
+(shuffle only, no checker — invalid at boundaries), ``noload`` (covered
+loads deleted — perf bound, invalid results).
+"""
+
+from __future__ import annotations
+
+import copy
+from typing import Dict, List
+
+from ..ptx.ir import Imm, Instr, Kernel, Label, MemRef, Reg
+from .detect import DetectionResult, ShufflePair
+
+MODES = ("ptxasw", "nocorner", "noload")
+
+
+def synthesize(kernel: Kernel, detection: DetectionResult,
+               mode: str = "ptxasw") -> Kernel:
+    assert mode in MODES
+    out = copy.deepcopy(kernel)
+    if not detection.pairs:
+        out.renumber()
+        return out
+
+    src_capture: Dict[int, str] = {}   # src stmt uid -> capture register
+    by_dst: Dict[int, ShufflePair] = {p.dst_uid: p for p in detection.pairs}
+
+    wid = out.new_reg("u32", hint="sflwid")
+    prologue: List[Instr] = [
+        Instr("mov.u32", [Reg(wid), Reg("%tid.x")]),
+        Instr("rem.u32", [Reg(wid), Reg(wid), Imm(32)]),
+    ]
+
+    # allocate capture regs per distinct source
+    for p in detection.pairs:
+        if p.src_uid not in src_capture:
+            src_instr = kernel.body[p.src_uid]
+            t = src_instr.type_suffix() or "b32"
+            src_capture[p.src_uid] = out.new_reg(t, hint="sflsrc")
+
+    new_body: List[object] = []
+    needs_prologue = mode in ("ptxasw", "nocorner")
+    placed_prologue = False
+    for stmt in kernel.body:
+        if isinstance(stmt, Label):
+            new_body.append(Label(stmt.name))
+            continue
+        instr = stmt
+        if needs_prologue and not placed_prologue:
+            new_body.extend(prologue)
+            placed_prologue = True
+        if instr.uid in by_dst:
+            pair = by_dst[instr.uid]
+            cap = src_capture[pair.src_uid]
+            t = instr.type_suffix() or "b32"
+            dst = instr.operands[0]
+            assert isinstance(dst, Reg)
+            if mode == "noload":
+                # covered load eliminated entirely (perf bound)
+                if instr.uid in src_capture:
+                    new_body.append(copy.deepcopy(instr))
+                    new_body.append(Instr(f"mov.{t}",
+                                          [Reg(src_capture[instr.uid]), dst]))
+                continue
+            if pair.delta == 0:
+                new_body.append(Instr(f"mov.{t}", [dst, Reg(cap)]))
+                continue
+            n = pair.delta
+            mask = out.new_reg("b32", hint="sflm")
+            new_body.append(Instr("activemask.b32", [Reg(mask)]))
+            if mode == "ptxasw":
+                inc = out.new_reg("pred", hint="sflinc")
+                oor = out.new_reg("pred", hint="sfloor")
+                pred = out.new_reg("pred", hint="sflp")
+                new_body.append(Instr("setp.ne.s32",
+                                      [Reg(inc), Reg(mask), Imm(-1)]))
+                if n < 0:
+                    new_body.append(Instr("setp.lt.u32",
+                                          [Reg(oor), Reg(wid), Imm(-n)]))
+                else:
+                    new_body.append(Instr("setp.gt.u32",
+                                          [Reg(oor), Reg(wid), Imm(31 - n)]))
+                new_body.append(Instr("or.pred",
+                                      [Reg(pred), Reg(inc), Reg(oor)]))
+            if n < 0:
+                new_body.append(Instr("shfl.sync.up.b32",
+                                      [dst, Reg(cap), Imm(-n), Imm(0),
+                                       Reg(mask)]))
+            else:
+                new_body.append(Instr("shfl.sync.down.b32",
+                                      [dst, Reg(cap), Imm(n), Imm(31),
+                                       Reg(mask)]))
+            if mode == "ptxasw":
+                corner = copy.deepcopy(instr)
+                corner.pred = (False, pred)
+                new_body.append(corner)
+            continue
+        new_body.append(copy.deepcopy(instr))
+        if instr.uid in src_capture:
+            t = instr.type_suffix() or "b32"
+            dst = instr.operands[0]
+            new_body.append(Instr(f"mov.{t}",
+                                  [Reg(src_capture[instr.uid]), dst]))
+    out.body = new_body
+    out.renumber()
+    return out

@@ -1,0 +1,3 @@
+from .conv1d import MODES, causal_conv1d, hbm_bytes  # noqa: F401
+from .ops import causal_conv1d_jit  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,13 @@
+"""jit'd entry point for the conv1d shuffle kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from .conv1d import causal_conv1d, hbm_bytes  # noqa: F401
+
+
+causal_conv1d_jit = jax.jit(
+    causal_conv1d,
+    static_argnames=("mode", "activation", "block_seq", "block_ch",
+                     "interpret"))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the depthwise causal conv1d (+ SiLU) kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  activation: bool = True) -> jnp.ndarray:
+    """x: (B, L, C); w: (W, C); b: (C,).  Zero left-padding (fresh seq).
+
+    Depthwise: out[b, l, c] = act( b[c] + sum_t w[t, c] * x[b, l-W+1+t, c] ).
+    """
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    L = x.shape[1]
+    acc = jnp.broadcast_to(b, x.shape).astype(jnp.float32)
+    for t in range(W):
+        acc = acc + xp[:, t:t + L].astype(jnp.float32) * w[t].astype(jnp.float32)
+    if activation:
+        acc = jax.nn.silu(acc)
+    return acc.astype(x.dtype)

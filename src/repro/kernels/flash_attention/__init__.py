@@ -1,0 +1,3 @@
+from .flash_attention import flash_attention  # noqa: F401
+from .ops import flash_attention_jit  # noqa: F401
+from .ref import attention_ref  # noqa: F401

@@ -1,0 +1,11 @@
+"""jit'd entry point for flash attention."""
+
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention  # noqa: F401
+
+flash_attention_jit = jax.jit(
+    flash_attention,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))

@@ -1,0 +1,16 @@
+"""Oracle for the flash attention kernel: re-exports the model-layer
+naive attention (O(S^2)-memory reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import AttnConfig, naive_attention
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    B, Sq, H, Dh = q.shape
+    cfg = AttnConfig(d_model=H * Dh, n_heads=H, n_kv_heads=k.shape[2],
+                     head_dim=Dh, rope_theta=0.0, causal=causal)
+    return naive_attention(q, k, v, cfg)

@@ -1,0 +1,2 @@
+from .ssd import ssd_pallas  # noqa: F401
+from .ref import ssd_ref  # noqa: F401

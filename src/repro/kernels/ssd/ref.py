@@ -1,0 +1,12 @@
+"""Oracle for the SSD Pallas kernel: the model-layer chunked scan."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_ref(xh, dt, A, Bm, Cm, chunk: int = 128):
+    y, _state = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    return y

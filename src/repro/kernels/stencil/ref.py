@@ -1,0 +1,97 @@
+"""Pure-jnp oracle for stencil DSL programs (no Pallas).
+
+Evaluates a :class:`repro.core.frontend.stencil.Program` over concrete
+arrays by interior slicing.  Array layout convention: the DSL index tuple
+is ``(i, j, k)`` with ``i`` the leading (contiguous / thread) dimension;
+JAX arrays are stored with ``i`` as the *last* axis, i.e. a 3-dim array
+has shape ``(nk, nj, ni)``.  The result covers the interior (full shape
+minus the per-dim halo on each side).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.frontend.stencil import (
+    Bin,
+    Call,
+    Const,
+    Expr,
+    Load,
+    Program,
+    Reduce,
+    Scalar,
+)
+
+_CALLS = {
+    "sin": jnp.sin,
+    "cos": jnp.cos,
+    "sqrt": jnp.sqrt,
+    "ex2": lambda x: jnp.exp2(x),
+    "lg2": lambda x: jnp.log2(x),
+}
+
+
+def tap_offsets(ld: Load, ndim: int) -> Tuple[int, ...]:
+    """Constant offsets of a load along the parallel dims (i, j, k)."""
+    out = []
+    for d in range(ndim):
+        ix = ld.idx[d] if d < len(ld.idx) else None
+        if ix is None:
+            out.append(0)
+            continue
+        for v, c in ix.coeffs:
+            if v not in ("i", "j", "k"):
+                raise ValueError(f"non-parallel index var {v!r} in {ld}")
+            if c != 1:
+                raise ValueError(f"non-unit stride {c} in {ld}")
+        out.append(ix.const)
+    return tuple(out)
+
+
+def interior_shape(shape: Tuple[int, ...], halo: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Interior of an array stored (…, nj, ni) with halo ordered (i, j, k)."""
+    ndim = len(shape)
+    return tuple(shape[a] - 2 * halo[ndim - 1 - a] for a in range(ndim))
+
+
+def _tap(x: jnp.ndarray, offs: Tuple[int, ...], halo: Tuple[int, ...]) -> jnp.ndarray:
+    """Interior view of ``x`` shifted by per-dim constant offsets."""
+    nd = x.ndim
+    slices = []
+    for axis in range(nd):
+        d = nd - 1 - axis           # parallel-dim index for this axis
+        h, c = halo[d], offs[d]
+        slices.append(slice(h + c, x.shape[axis] - h + c))
+    return x[tuple(slices)]
+
+
+def evaluate(prog: Program, arrays: Dict[str, jnp.ndarray],
+             scalars: Dict[str, float] | None = None) -> jnp.ndarray:
+    """Evaluate the program; returns the interior-shaped output."""
+    scalars = scalars or {}
+    halo = prog.halo
+
+    def ev(e: Expr) -> jnp.ndarray:
+        if isinstance(e, Load):
+            x = arrays[e.array]
+            return _tap(x, tap_offsets(e, x.ndim), halo)
+        if isinstance(e, Const):
+            return jnp.float32(e.value)
+        if isinstance(e, Scalar):
+            return jnp.float32(scalars[e.name])
+        if isinstance(e, Bin):
+            a, b = ev(e.a), ev(e.b)
+            return {"+": jnp.add, "-": jnp.subtract,
+                    "*": jnp.multiply, "/": jnp.divide}[e.op](a, b)
+        if isinstance(e, Call):
+            return _CALLS[e.fn](ev(e.arg))
+        if isinstance(e, Reduce):
+            raise NotImplementedError(
+                "Reduce programs (matmul/matvec) have no stencil kernel; "
+                "they are the paper's negative cases")
+        raise TypeError(e)
+
+    return ev(prog.expr).astype(jnp.float32)

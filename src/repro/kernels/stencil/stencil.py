@@ -1,0 +1,237 @@
+"""Pallas TPU stencil kernel with shuffle-synthesized data reuse.
+
+This is the TPU-native port of the paper's shuffle synthesis (DESIGN.md
+§2).  A GPU warp's lanes become the lane dimension of a VMEM tile; the
+``shfl.sync.up/down N`` register exchange becomes a *static shifted
+slice* of a tile already resident in VMEM — the halo columns of the tile
+play the role of the paper's corner-case loads, resolved at compile time
+instead of per-thread predication.
+
+Three fetch plans, mirroring the paper's ablation structure:
+
+``naive``   one HBM fetch per static load in the PTX (the *Original*):
+            every tap of every array is a separate (Bk,Bj,Bi) fetch.
+``paper``   PTXASW-faithful: loads that the symbolic emulator proved
+            shuffle-coverable (same array, same non-leading offsets,
+            constant lane delta) share ONE row fetch widened by the
+            lane span; uncovered loads stay separate fetches.  This is
+            exactly the paper's "source load + shfl" reuse, with the
+            lane shift realized as a static slice.
+``tile``    beyond-paper TPU-native plan: ONE halo tile per array,
+            every tap a shifted slice in *all* dims (the multi-dim
+            generalization the warp cannot express).
+
+The kernel keeps inputs in ``pl.ANY`` (HBM) and stages fetches through
+VMEM scratch explicitly, so the HBM traffic of each plan is visible both
+in the analytic model (:func:`hbm_bytes_per_block`) and in the lowered
+IR.  Correctness is validated in interpret mode against
+:mod:`repro.kernels.stencil.ref` (the pure-jnp oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.frontend.stencil import (
+    Bin,
+    Call,
+    Const,
+    Expr,
+    Load,
+    Program,
+    Scalar,
+    collect_loads,
+)
+from .ref import _CALLS, tap_offsets
+
+MODES = ("naive", "paper", "tile")
+
+DEFAULT_BLOCKS = {1: (256,), 2: (8, 128), 3: (1, 8, 128)}
+
+
+# ---------------------------------------------------------------------------
+# fetch planning
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Fetch:
+    """One HBM->VMEM transfer: per-dim (lo, hi) tap extents around the
+    output block, ordered (i, j, k).  Serves ``taps`` (offset tuples)."""
+
+    array: str
+    lo: Tuple[int, ...]
+    hi: Tuple[int, ...]
+    taps: Tuple[Tuple[int, ...], ...]
+
+    def shape(self, block: Sequence[int]) -> Tuple[int, ...]:
+        """VMEM buffer shape, axis order = array order (k, j, i); ``block``
+        is given in the same array-axis order, lo/hi in dim order (i,j,k)."""
+        nd = len(self.lo)
+        return tuple(block[a] + self.hi[nd - 1 - a] - self.lo[nd - 1 - a]
+                     for a in range(nd))
+
+
+@dataclass
+class FetchPlan:
+    mode: str
+    fetches: List[Fetch]
+
+    def bytes_per_block(self, block: Sequence[int], itemsize: int = 4) -> int:
+        total = 0
+        for f in self.fetches:
+            n = 1
+            for s in f.shape(block):
+                n *= s
+            total += n * itemsize
+        return total
+
+
+def _unique_taps(prog: Program) -> List[Tuple[str, Tuple[int, ...]]]:
+    seen = []
+    for ld in collect_loads(prog.expr):
+        key = (ld.array, tap_offsets(ld, prog.ndim))
+        if key not in seen:
+            seen.append(key)
+    return seen
+
+
+def make_plan(prog: Program, mode: str) -> FetchPlan:
+    assert mode in MODES
+    taps = _unique_taps(prog)
+    nd = prog.ndim
+    fetches: List[Fetch] = []
+    if mode == "naive":
+        for arr, off in taps:
+            fetches.append(Fetch(arr, off, off, (off,)))
+    elif mode == "paper":
+        # group by (array, non-leading offsets): the emulator's shuffle rows
+        rows: Dict[Tuple, List[Tuple[int, ...]]] = {}
+        for arr, off in taps:
+            rows.setdefault((arr, off[1:]), []).append(off)
+        for (arr, _rest), offs in rows.items():
+            lo = (min(o[0] for o in offs),) + offs[0][1:]
+            hi = (max(o[0] for o in offs),) + offs[0][1:]
+            fetches.append(Fetch(arr, lo, hi, tuple(offs)))
+    else:  # tile
+        per_array: Dict[str, List[Tuple[int, ...]]] = {}
+        for arr, off in taps:
+            per_array.setdefault(arr, []).append(off)
+        for arr, offs in per_array.items():
+            lo = tuple(min(o[d] for o in offs) for d in range(nd))
+            hi = tuple(max(o[d] for o in offs) for d in range(nd))
+            fetches.append(Fetch(arr, lo, hi, tuple(offs)))
+    return FetchPlan(mode, fetches)
+
+
+def hbm_bytes_per_block(prog: Program, mode: str,
+                        block: Sequence[int], itemsize: int = 4) -> int:
+    return make_plan(prog, mode).bytes_per_block(block, itemsize)
+
+
+# ---------------------------------------------------------------------------
+# kernel construction
+# ---------------------------------------------------------------------------
+
+def _build_kernel(prog: Program, plan: FetchPlan, block: Tuple[int, ...],
+                  scalars: Dict[str, float], array_names: List[str]):
+    nd = prog.ndim
+    halo = prog.halo
+
+    def kernel(*refs):
+        in_refs = dict(zip(array_names, refs[:-1]))
+        out_ref = refs[-1]
+        pids = [pl.program_id(a) for a in range(nd)]        # (gk.., gj, gi)
+        # block start per parallel dim d (i=0 .. k=nd-1), in *array* coords
+        starts = {}
+        for d in range(nd):
+            axis = nd - 1 - d
+            starts[d] = pids[axis] * block[axis] + halo[d]
+
+        # stage fetches: tap offsets -> loaded values
+        tap_val: Dict[Tuple[str, Tuple[int, ...]], jnp.ndarray] = {}
+        for f in plan.fetches:
+            ref = in_refs[f.array]
+            idx = []
+            for axis in range(nd):
+                d = nd - 1 - axis
+                size = block[axis] + f.hi[d] - f.lo[d]
+                idx.append(pl.dslice(starts[d] + f.lo[d], size))
+            buf = ref[tuple(idx)]                          # HBM -> VMEM fetch
+            for off in f.taps:
+                sl = []
+                for axis in range(nd):
+                    d = nd - 1 - axis
+                    begin = off[d] - f.lo[d]
+                    sl.append(slice(begin, begin + block[axis]))
+                # static shifted slice of the staged buffer — the TPU
+                # analogue of shfl.sync with delta (off - source)
+                tap_val[(f.array, off)] = buf[tuple(sl)]
+
+        def ev(e: Expr) -> jnp.ndarray:
+            if isinstance(e, Load):
+                return tap_val[(e.array, tap_offsets(e, nd))]
+            if isinstance(e, Const):
+                return jnp.float32(e.value)
+            if isinstance(e, Scalar):
+                return jnp.float32(scalars[e.name])
+            if isinstance(e, Bin):
+                a, b = ev(e.a), ev(e.b)
+                return {"+": jnp.add, "-": jnp.subtract,
+                        "*": jnp.multiply, "/": jnp.divide}[e.op](a, b)
+            if isinstance(e, Call):
+                return _CALLS[e.fn](ev(e.arg))
+            raise TypeError(e)
+
+        out_ref[...] = ev(prog.expr).astype(out_ref.dtype)
+
+    return kernel
+
+
+def build_stencil(prog: Program, mode: str = "tile",
+                  block: Optional[Tuple[int, ...]] = None,
+                  scalars: Optional[Dict[str, float]] = None,
+                  interpret: bool = True):
+    """Build a callable ``f(arrays: dict) -> interior output`` running the
+    stencil as a Pallas kernel with the given fetch plan.
+
+    Interior sizes (shape - 2*halo per dim) must divide the block; use
+    :func:`repro.kernels.stencil.ops.stencil_apply` for auto-padding.
+    """
+    assert mode in MODES
+    block = tuple(block) if block else DEFAULT_BLOCKS[prog.ndim]
+    assert len(block) == prog.ndim
+    plan = make_plan(prog, mode)
+    scalars = dict(scalars or {})
+    array_names = sorted(a for a in prog.arrays if a != prog.out.array)
+    kernel = _build_kernel(prog, plan, block, scalars, array_names)
+    nd = prog.ndim
+    halo = prog.halo
+
+    def apply_fn(arrays: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        shape = arrays[array_names[0]].shape
+        interior = tuple(shape[a] - 2 * halo[nd - 1 - a] for a in range(nd))
+        grid = tuple(interior[a] // block[a] for a in range(nd))
+        for a in range(nd):
+            if interior[a] % block[a]:
+                raise ValueError(
+                    f"interior {interior} not divisible by block {block}")
+        in_specs = [pl.BlockSpec(memory_space=pl.ANY)
+                    for _ in array_names]
+        out_spec = pl.BlockSpec(block, lambda *p: p)
+        fn = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(interior, jnp.float32),
+            interpret=interpret,
+        )
+        return fn(*[arrays[a] for a in array_names])
+
+    return apply_fn

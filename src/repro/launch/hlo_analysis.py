@@ -1,0 +1,343 @@
+"""Trip-count-aware analysis of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, but our
+models scan over layers / sequence chunks / KV blocks — so raw XLA
+numbers under-report FLOPs and collective bytes by the loop trip counts
+(e.g. 95x for deepseek-67b's layer scan).  This module re-derives
+
+  * matmul FLOPs        (dot ops: 2 * prod(out) * prod(contracted))
+  * bytes accessed      (HloCostAnalysis convention: operands + outputs
+                         at fusion granularity, trivial ops excluded)
+  * collective bytes    (all-gather / all-reduce / reduce-scatter /
+                         all-to-all / collective-permute, operand bytes)
+
+with every op scaled by the product of its enclosing loops' trip
+counts.  Trip counts are parsed from each while-condition computation
+(the ``constant(N)`` bound of the induction-variable compare — exact
+for lax.scan/fori_loop lowerings).  Post-optimization HLO does not
+carry operand shapes inline, so a per-computation symbol table maps
+operand names to the shapes at their definition sites.
+
+All figures are per-participant (per device), matching the semantics of
+``compiled.memory_analysis()`` on SPMD modules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)"
+    r"\[([0-9,]*)\]")
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TRIVIAL = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "after-all", "opt-barrier", "copy"}
+
+# Ops that materialize tensors in HBM on TPU even under aggressive XLA
+# fusion: contractions, reductions, data movement, collectives.  Pure
+# elementwise/shape ops (add, mul, exp, select, broadcast, convert,
+# reshape, transpose, iota, compare, ...) fuse into their consumers and
+# their intermediates never touch HBM — the CPU backend materializes
+# far more than a TPU would, so byte-counting every op is a loose upper
+# bound.  ``bytes_hbm`` counts only these materialization points.
+_MATERIALIZING = {
+    "dot", "convolution", "reduce", "reduce-window", "sort", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice", "fusion",
+    "custom-call", "rng", "rng-bit-generator", "cholesky",
+    "triangular-solve", "fft", "pad", "concatenate",
+}
+
+_REF_KEYS = ("body", "condition", "calls", "to_apply",
+             "true_computation", "false_computation", "branch_computations")
+
+
+def _prod(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_list_bytes(text: str) -> int:
+    return sum(_prod(m.group(2)) * _DTYPE_BYTES[m.group(1)]
+               for m in _SHAPE_RE.finditer(text))
+
+
+def _first_shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _split_top_level(text: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in text:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [t for t in out if t]
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    line: str
+    result_text: str
+    args: List[str]
+    attrs_text: str
+    out_bytes: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo] = dataclasses.field(default_factory=list)
+    symtab: Dict[str, Tuple[int, str]] = dataclasses.field(
+        default_factory=dict)    # name -> (bytes, result_text)
+    is_fused: bool = False
+
+
+def _balanced_span(text: str, start: int) -> int:
+    """Index just past the matching close paren for the '(' at start."""
+    depth = 0
+    for i in range(start, len(text)):
+        if text[i] == "(":
+            depth += 1
+        elif text[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(text)
+
+
+def _parse_op(ls: str) -> Optional[Tuple[str, str, str, str, str]]:
+    """-> (name, result_text, opcode, args_text, attrs_text) or None."""
+    nm = _NAME_RE.match(ls)
+    if not nm:
+        return None
+    name = nm.group(1)
+    rhs = ls[nm.end():]
+    # result type: balanced-paren tuple or single token
+    if rhs.startswith("("):
+        tend = _balanced_span(rhs, 0)
+        result_text = rhs[:tend]
+        rest = rhs[tend:].lstrip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return None
+        result_text = rhs[:sp]
+        rest = rhs[sp + 1:].lstrip()
+    pi = rest.find("(")
+    if pi <= 0:
+        return None
+    opcode = rest[:pi].strip()
+    if not re.fullmatch(r"[a-z][\w\-]*", opcode):
+        return None
+    aend = _balanced_span(rest, pi)
+    args_text = rest[pi + 1:aend - 1]
+    attrs_text = rest[aend:]
+    return name, result_text, opcode, args_text, attrs_text
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    called: set = set()
+    for raw in text.splitlines():
+        ls = raw.strip()
+        # computation header: [ENTRY] %name (...params...) -> type {
+        if ls.endswith("{") and "->" in ls and " = " not in ls:
+            hm = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", ls)
+            if hm:
+                cur = Computation(name=hm.group(1))
+                comps[cur.name] = cur
+                continue
+        if ls.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_op(ls)
+        if parsed is None:
+            continue
+        name, result_text, opcode, args_text, attrs_text = parsed
+        out_bytes = _shape_list_bytes(result_text)
+        args = _split_top_level(args_text)
+        cur.symtab[name] = (out_bytes, result_text)
+        cur.ops.append(OpInfo(name=name, opcode=opcode, line=ls,
+                              result_text=result_text, args=args,
+                              attrs_text=attrs_text, out_bytes=out_bytes))
+        for key in ("calls", "to_apply"):
+            for rm in re.finditer(key + r"=%?([\w.\-]+)", attrs_text):
+                called.add(rm.group(1))
+    for cname in called:
+        if cname in comps:
+            comps[cname].is_fused = True
+    return comps
+
+
+def _op_refs(op: OpInfo) -> List[Tuple[str, str]]:
+    refs = []
+    for key in _REF_KEYS:
+        for rm in re.finditer(key + r"=\{?%?([\w.\-, %]+?)\}?(?:,|$)",
+                              op.attrs_text):
+            for nm in re.split(r"[,\s]+", rm.group(1)):
+                nm = nm.lstrip("%")
+                if nm:
+                    refs.append((key, nm))
+    return refs
+
+
+class _Resolver:
+    def __init__(self, comps: Dict[str, Computation]):
+        self.comps = comps
+        self.global_tab: Dict[str, Tuple[int, str]] = {}
+        for c in comps.values():
+            self.global_tab.update(c.symtab)
+
+    def operand_bytes(self, comp: Computation, arg: str) -> int:
+        if _SHAPE_RE.search(arg):
+            return _shape_list_bytes(arg)
+        nm = arg.lstrip("%")
+        hit = comp.symtab.get(nm) or self.global_tab.get(nm)
+        return hit[0] if hit else 0
+
+    def operand_shape(self, comp: Computation, arg: str) -> Optional[List[int]]:
+        if _SHAPE_RE.search(arg):
+            return _first_shape_dims(arg)
+        nm = arg.lstrip("%")
+        hit = comp.symtab.get(nm) or self.global_tab.get(nm)
+        return _first_shape_dims(hit[1]) if hit else None
+
+
+def _dot_flops(op: OpInfo, comp: Computation, res: _Resolver) -> float:
+    out_dims = _first_shape_dims(op.result_text) or []
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    lhs = res.operand_shape(comp, op.args[0]) if op.args else None
+    if lhs is None:
+        return 0.0
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs_text)
+    contracted = 1
+    if cm:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs):
+                contracted *= lhs[int(idx)]
+    return 2.0 * out_elems * contracted
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    # constants can also live in the symtab via parameter-less lines
+    for m in re.finditer(r"constant\((-?\d+)\)",
+                         " ".join(o.line for o in cond.ops)):
+        best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0      # every op (CPU-fusion upper bound)
+    bytes_hbm: float = 0.0           # materialization points only
+                                     # (TPU-fusion approximation)
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    collective_count: int = 0
+    n_while: int = 0
+    trip_counts: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(text: str) -> HloStats:
+    comps = parse_hlo(text)
+    res = _Resolver(comps)
+
+    referenced: set = set()
+    for c in comps.values():
+        for op in c.ops:
+            referenced.update(nm for _k, nm in _op_refs(op))
+    entries = [c for c in comps.values() if c.name not in referenced]
+
+    stats = HloStats()
+    mult: Dict[str, float] = {}
+
+    def visit(cname: str, m: float, depth: int = 0) -> None:
+        if cname not in comps or depth > 64:
+            return
+        mult[cname] = mult.get(cname, 0.0) + m
+        for op in comps[cname].ops:
+            refs = _op_refs(op)
+            if op.opcode == "while":
+                cond = next((nm for k, nm in refs if k == "condition"), None)
+                body = next((nm for k, nm in refs if k == "body"), None)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                stats.n_while += 1
+                stats.trip_counts.append(trips)
+                if cond:
+                    visit(cond, m, depth + 1)
+                if body:
+                    visit(body, m * trips, depth + 1)
+            else:
+                for _k, nm in refs:
+                    visit(nm, m, depth + 1)
+
+    for e in entries:
+        visit(e.name, 1.0)
+
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for op in comp.ops:
+            if op.opcode == "dot":
+                stats.flops += _dot_flops(op, comp, res) * m
+            if comp.is_fused:
+                continue
+            if op.opcode in _TRIVIAL or op.opcode == "while":
+                continue
+            if op.opcode.endswith("-done"):
+                continue
+            operand_b = sum(res.operand_bytes(comp, a) for a in op.args)
+            stats.bytes_accessed += (op.out_bytes + operand_b) * m
+            coll = next((c for c in _COLLECTIVES
+                         if op.opcode == c or op.opcode == c + "-start"), None)
+            if op.opcode in _MATERIALIZING or coll:
+                stats.bytes_hbm += (op.out_bytes + operand_b) * m
+            if coll:
+                stats.collective_bytes[coll] += operand_b * m
+                stats.collective_count += 1
+    return stats

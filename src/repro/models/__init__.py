@@ -1,0 +1,10 @@
+from .lm import (  # noqa: F401
+    EncDecModel,
+    HybridModel,
+    Model,
+    SSMModel,
+    VLMModel,
+    build_model,
+    chunked_ce_loss,
+)
+from .common import LogicalArray, larray, logical_axes, unbox  # noqa: F401

@@ -1,0 +1,109 @@
+"""Parameter and MODEL_FLOPS accounting for the roofline analysis.
+
+MODEL_FLOPS is the *useful* work: 6·N_eff·D for training (fwd 2 + bwd 4),
+2·N_eff·D for inference forward passes, where N_eff counts parameters
+actually touched per token:
+
+* dense:   all params (embedding gather excluded, unembed included once)
+* MoE:     non-expert params + top_k / n_experts of expert params
+* hybrid:  mamba params + (#applications) x shared-block params
+* audio:   encoder params x frame tokens + decoder params x text tokens
+
+plus the attention quadratic term 4·S_kv·d_model per token per attn
+layer (score + PV), averaged over the causal triangle for training.
+The ratio MODEL_FLOPS / HLO_FLOPS surfaces remat recompute, masked-out
+attention blocks, capacity-factor MoE overcompute and padding waste.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import build_model
+from repro.models.common import LogicalArray
+
+
+def _tree_size(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, LogicalArray))
+    total = 0
+    for l in leaves:
+        v = l.value if isinstance(l, LogicalArray) else l
+        total += int(np.prod(v.shape))
+    return total
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, int]:
+    """Exact parameter counts from the abstract param tree."""
+    model = build_model(cfg)
+    boxed = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    total = _tree_size(boxed)
+    out = {"total": total}
+    if cfg.family == "moe":
+        expert = sum(_tree_size(b) for k, b in _moe_expert_leaves(boxed))
+        out["expert"] = expert
+        out["active"] = total - expert + (expert * cfg.moe_top_k
+                                          // max(cfg.n_experts, 1))
+    elif cfg.family == "hybrid":
+        model2 = build_model(cfg)
+        shared = _tree_size(boxed["shared_attn"])
+        n_apps = cfg.n_layers // cfg.attn_every
+        out["active"] = total + (n_apps - 1) * shared
+    else:
+        out["active"] = total
+    return out
+
+
+def _moe_expert_leaves(boxed) -> list:
+    found = []
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if k == "moe":
+                    for wk in ("w_gate", "w_up", "w_down"):
+                        found.append((path + "/" + wk, v[wk]))
+                else:
+                    walk(v, path + "/" + k)
+
+    walk(boxed)
+    return found
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, float]:
+    """MODEL_FLOPS (global, whole step) for the (arch, shape) cell."""
+    counts = param_counts(cfg)
+    n_eff = counts["active"]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        mult = 6.0
+        s_ctx = S / 2            # causal average context
+    elif shape.kind == "prefill":
+        tokens = B * S
+        mult = 2.0
+        s_ctx = S / 2
+    else:                        # decode: one token per sequence
+        tokens = B
+        mult = 2.0
+        s_ctx = S                # full KV cache attended
+    core = mult * n_eff * tokens
+    # attention quadratic term: 4 * s_ctx * d_model per token per layer
+    attn_layers = 0
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        attn_layers = cfg.n_layers
+    elif cfg.family == "hybrid":
+        attn_layers = cfg.n_layers // cfg.attn_every
+    attn = mult / 2.0 * 4.0 * s_ctx * cfg.d_model * tokens * attn_layers
+    if cfg.family == "audio":
+        # encoder runs over frame tokens (self-attn, bidirectional)
+        enc_params = n_eff * cfg.n_encoder_layers / max(
+            cfg.n_encoder_layers + cfg.n_layers, 1)
+        frames = B * cfg.n_frames if shape.kind != "decode" else 0
+        core += mult * enc_params * frames
+    return {"model_flops": core + attn, "core": core, "attention": attn,
+            "n_params": counts["total"], "n_active": n_eff}

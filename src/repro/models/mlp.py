@@ -1,0 +1,33 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GELU (starcoder2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import EMBED, FF, Params, dense_init, larray
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str = "swiglu",
+             dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": larray(dense_init(ks[0], (d_model, d_ff), dtype=dtype), EMBED, FF),
+        "w_down": larray(dense_init(ks[1], (d_ff, d_model), dtype=dtype), FF, EMBED),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = larray(dense_init(ks[2], (d_model, d_ff), dtype=dtype),
+                             EMBED, FF)
+    return p
+
+
+def apply_mlp(params: Params, x: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if kind == "swiglu":
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = jax.nn.silu(gate) * up
+    elif kind == "gelu":
+        h = jax.nn.gelu(up)
+    else:
+        raise ValueError(kind)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])

@@ -1,0 +1,1 @@
+from .health import ElasticPlan, Heartbeat, StragglerDetector, plan_elastic  # noqa: F401

@@ -1,0 +1,48 @@
+"""Serving steps: prefill / decode with batched requests and sampling."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill_step(model, max_len: Optional[int] = None) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(model, temperature: float = 0.0) -> Callable:
+    """(params, tokens (B,), cache, rng) -> (next tokens, cache)."""
+
+    def decode_step(params, tokens, cache, rng):
+        logits, cache = model.decode_step(params, tokens, cache)
+        if temperature <= 0.0:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jax.random.categorical(
+                rng, logits / temperature).astype(jnp.int32)
+        return nxt, cache
+
+    return decode_step
+
+
+def generate(model, params, batch: Dict[str, jnp.ndarray], n_tokens: int,
+             temperature: float = 0.0, rng=None,
+             max_len: Optional[int] = None) -> jnp.ndarray:
+    """Greedy/temperature generation loop (host-side driver)."""
+    B, S = batch["tokens"].shape
+    max_len = max_len or (S + n_tokens)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    logits, cache = model.prefill(params, batch, max_len=max_len)
+    decode = make_decode_step(model, temperature)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [tok]
+    for i in range(n_tokens - 1):
+        rng, sub = jax.random.split(rng)
+        tok, cache = decode(params, tok, cache, sub)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,8 @@
+from .rules import (  # noqa: F401
+    DEFAULT_RULES,
+    batch_sharding,
+    param_shardings,
+    param_specs,
+    resolve_spec,
+    shard_batch_spec,
+)

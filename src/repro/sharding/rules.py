@@ -1,0 +1,165 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Models annotate parameters with logical names (repro.models.common);
+this module resolves them against a concrete mesh into NamedShardings.
+Resolution is *divisibility-checked*: a logical axis whose dimension
+does not divide the mapped mesh-axis size falls back to replication for
+that dim (e.g. GQA archs with n_kv_heads < tensor-axis size, or vocab
+sizes that are not lane multiples) — recorded so DESIGN.md can report
+which dims degraded.
+
+Default logical map (16x16 production mesh, DESIGN.md §5):
+
+  vocab   -> model   (tensor-parallel unembedding)
+  embed   -> data    (ZeRO-3/FSDP: params gathered per use)
+  heads   -> model   (tensor-parallel attention)
+  kv_heads-> model   (replicated automatically when kv < |model|)
+  ff      -> model   (tensor-parallel MLP)
+  expert  -> data    (expert parallelism: all_to_all dispatch)
+  inner   -> model   (SSM inner dim)
+  batch   -> (pod, data)
+  seq     -> model   (sequence parallelism in MoE dispatch / long ctx)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import LogicalArray, logical_axes, unbox
+
+AxisMap = Dict[str, Union[str, Tuple[str, ...], None]]
+
+DEFAULT_RULES: AxisMap = {
+    "vocab": "model",
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "expert": "data",
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "inner": "model",
+    "batch": ("pod", "data"),
+    "seq": "model",
+}
+
+
+def _axis_size(mesh: Mesh, axes: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_spec(shape: Tuple[int, ...],
+                 logical: Tuple[Optional[str], ...],
+                 mesh: Mesh,
+                 rules: Optional[AxisMap] = None,
+                 report: Optional[List[str]] = None) -> P:
+    """Logical axes tuple -> PartitionSpec, with divisibility fallback."""
+    rules = rules or DEFAULT_RULES
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        mapped = rules.get(name) if name else None
+        if mapped is None:
+            parts.append(None)
+            continue
+        axes = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        # a mesh axis may appear once per spec
+        if any(a in used for a in axes) or any(a not in mesh.shape for a in axes):
+            parts.append(None)
+            continue
+        if dim % _axis_size(mesh, axes) != 0:
+            if report is not None:
+                report.append(
+                    f"dim {name}={dim} not divisible by {axes} "
+                    f"({_axis_size(mesh, axes)}) -> replicated")
+            parts.append(None)
+            continue
+        used.update(axes)
+        parts.append(axes[0] if len(axes) == 1 else tuple(axes))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_shardings(boxed_params: Any, mesh: Mesh,
+                    rules: Optional[AxisMap] = None,
+                    report: Optional[List[str]] = None):
+    """Boxed param tree -> matching tree of NamedShardings."""
+    def leaf(x: LogicalArray):
+        spec = resolve_spec(tuple(x.value.shape), x.axes, mesh, rules, report)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(
+        leaf, boxed_params, is_leaf=lambda x: isinstance(x, LogicalArray))
+
+
+def param_specs(boxed_params: Any, mesh: Mesh,
+                rules: Optional[AxisMap] = None):
+    def leaf(x: LogicalArray):
+        return resolve_spec(tuple(x.value.shape), x.axes, mesh, rules)
+
+    return jax.tree_util.tree_map(
+        leaf, boxed_params, is_leaf=lambda x: isinstance(x, LogicalArray))
+
+
+def batch_sharding(mesh: Mesh, rules: Optional[AxisMap] = None):
+    """Sharding for token batches (B, S): batch over (pod, data)."""
+    rules = rules or DEFAULT_RULES
+    b = rules.get("batch")
+    axes = tuple(a for a in ((b,) if isinstance(b, str) else b)
+                 if a in mesh.shape)
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+
+
+def shard_batch_spec(mesh: Mesh, shape: Tuple[int, ...],
+                     batch_dim: int = 0) -> P:
+    parts: List[Any] = [None] * len(shape)
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if shape[batch_dim] % _axis_size(mesh, axes) == 0:
+        parts[batch_dim] = axes if len(axes) > 1 else axes[0]
+    return P(*parts)
+
+
+def rules_for(cfg, mesh: Mesh) -> AxisMap:
+    """Config-aware rules: the MoE ``ep_tp`` schedule stores experts on
+    the tensor axis with full-width FFN, so the logical EXPERT axis maps
+    to 'model' and FF replicates (matching the shard_map in_specs — no
+    per-layer resharding at the boundary)."""
+    rules = dict(DEFAULT_RULES)
+    sched = getattr(cfg, "moe_schedule", "2d")
+    if getattr(cfg, "n_experts", 0) and sched in ("ep_tp", "auto"):
+        from repro.models.moe import choose_schedule
+        resolved = sched if sched != "auto" else choose_schedule(
+            cfg.n_experts, cfg.d_model, cfg.d_ff, mesh)
+        if resolved == "ep_tp":
+            rules["expert"] = "model"
+            rules["ff"] = None
+    return rules
+
+
+def constrain_batch(x, mesh: Optional[Mesh]):
+    """Pin the batch (dim 0) sharding of an activation to (pod, data).
+
+    GSPMD resolves the FSDP conflict (batch over `data` on activations
+    vs weight embed-dim over `data`) by whichever reshard looks locally
+    cheaper — inside a scanned layer body it tends to *replicate the
+    activations* and keep weights sharded, exploding the per-device
+    working set.  Constraining activations at block boundaries forces
+    the ZeRO-3 schedule instead: weights are all-gathered per layer and
+    activations stay batch-sharded.  (Same technique as MaxText's
+    logical constraints.)
+    """
+    if mesh is None:
+        return x
+    spec = shard_batch_spec(mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run alone uses 512 fake devices, in
+# its own process).  Keep BLAS modest so parallel CI boxes don't thrash.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,185 @@
+"""Core PTXASW pipeline tests: Table 2 reproduction, bit-exact concrete
+equivalence (including a property test over random stencils), parser
+roundtrip, emulator behaviours."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.emulator.concrete import run_concrete
+from repro.core.emulator.machine import emulate
+from repro.core.frontend.kernelgen import all_benches, get_bench
+from repro.core.frontend.stencil import (Array, I, J, Program, Scalar,
+                                         lower_to_ptx)
+from repro.core.ptx import parse_kernel, print_kernel
+from repro.core.synthesis.detect import detect
+from repro.core.synthesis.codegen import synthesize
+from repro.core.synthesis.pipeline import ptxasw, ptxasw_kernel
+
+
+# ---------------------------------------------------------------------------
+# Table 2 + §8.5 (the paper's headline numbers)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(all_benches(include_apps=True)))
+def test_table2_row(name):
+    b = all_benches(include_apps=True)[name]
+    kernel = lower_to_ptx(b.program)
+    _, rep = ptxasw_kernel(kernel, max_delta=b.max_delta)
+    d = rep.detection
+    assert (d.n_shuffles, d.n_loads) == (b.expect_shuffles, b.expect_loads)
+    if b.expect_delta is None:
+        assert d.mean_abs_delta is None
+    else:
+        assert abs(d.mean_abs_delta - b.expect_delta) < 0.01
+
+
+def test_parser_printer_roundtrip():
+    kernel = lower_to_ptx(get_bench("jacobi").program)
+    text = print_kernel(kernel)
+    kernel2 = parse_kernel(text)
+    assert print_kernel(kernel2) == text
+    # and the reparsed kernel detects identically
+    _, rep = ptxasw_kernel(kernel2)
+    assert rep.detection.n_shuffles == 6
+
+
+def test_ptxasw_text_interface():
+    kernel = lower_to_ptx(get_bench("laplacian").program)
+    out_text, reports = ptxasw(print_kernel(kernel))
+    assert "shfl.sync" in out_text
+    assert reports[0].detection.n_shuffles == 2
+
+
+# ---------------------------------------------------------------------------
+# bit-exact concrete equivalence (the correctness oracle for GPU runs)
+# ---------------------------------------------------------------------------
+
+def _f32_bits(v):
+    return int(np.frombuffer(np.float32(v).tobytes(), np.uint32)[0])
+
+
+def _run_versions(prog, max_delta=31, nx=70, ny=6, nz=5, block_x=64):
+    kernel = lower_to_ptx(prog)
+    flows = emulate(kernel)
+    detection = detect(kernel, flows, max_delta=max_delta)
+    syn = synthesize(kernel, detection, mode="ptxasw")
+    rng = np.random.default_rng(0)
+    nd = prog.ndim
+    shape = {1: (nx,), 2: (ny, nx), 3: (nz, ny, nx)}[nd]
+    outs = []
+    for k in (kernel, syn):
+        params = {}
+        for arr, adim in prog.arrays.items():
+            params[arr] = (np.zeros(shape[-adim:], np.float32)
+                           if arr == prog.out.array else
+                           rng.standard_normal(shape[-adim:])
+                           .astype(np.float32))
+        for d in range(nd):
+            params[f"n{d}"] = shape[::-1][d]
+        for s in prog.scalars:
+            params[s] = _f32_bits(0.3)
+        h = prog.halo
+        interior_x = shape[-1] - 2 * h[0]
+        nbx = -(-interior_x // block_x)
+        if nd == 1:
+            grid = (nbx, 1, 1)
+        elif nd == 2:
+            grid = (nbx, shape[0] - 2 * h[1], 1)
+        else:
+            grid = (nbx, shape[1] - 2 * h[1], shape[0] - 2 * h[2])
+        rng = np.random.default_rng(0)   # same inputs for both versions
+        run_concrete(k, params, ntid=(block_x, 1, 1), nctaid=grid)
+        outs.append(params[prog.out.array].copy())
+    return outs, detection
+
+
+@pytest.mark.parametrize("name", ["jacobi", "gaussblur", "laplacian",
+                                  "whispering", "uxx1", "wave13pt"])
+def test_synthesized_bit_exact(name):
+    b = get_bench(name)
+    outs, detection = _run_versions(b.program, max_delta=b.max_delta)
+    assert detection.n_shuffles > 0
+    assert np.array_equal(outs[0], outs[1]), \
+        f"{name}: shuffle synthesis changed results"
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.tuples(st.integers(-3, 3), st.integers(-2, 2)),
+                min_size=2, max_size=8, unique=True),
+       st.integers(0, 2**31 - 1))
+def test_random_stencil_bit_exact(taps, seed):
+    """Property: for ANY 2D stencil program, PTXASW output == original."""
+    w = Array("w0")
+    expr = None
+    rng = np.random.default_rng(seed)
+    for (di, dj) in taps:
+        term = float(rng.uniform(0.1, 1.0)) * w[I(di), J(dj)]
+        expr = term if expr is None else expr + term
+    prog = Program(name="rand", ndim=2, out=Array("w1")[I(), J()], expr=expr)
+    outs, _ = _run_versions(prog, nx=68 + 2 * prog.halo[0],
+                            ny=4 + 2 * prog.halo[1])
+    assert np.array_equal(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# emulator behaviours
+# ---------------------------------------------------------------------------
+
+def test_branch_pruning():
+    """Contradictory branches must not contribute flows."""
+    ptx = """
+.visible .entry k(.param .u64 a, .param .u64 c){
+  .reg .pred %p<3>; .reg .b32 %r<6>; .reg .b64 %rd<6>; .reg .f32 %f<3>;
+  ld.param.u64 %rd1, [a]; cvta.to.global.u64 %rd2, %rd1;
+  mov.u32 %r1, %tid.x;
+  setp.lt.s32 %p1, %r1, 10;
+  @!%p1 bra $L1;
+  setp.gt.s32 %p2, %r1, 20;
+  @%p2 bra $L2;
+  bra $DONE;
+$L1: bra $DONE;
+$L2:
+  ld.global.f32 %f1, [%rd2];
+$DONE: ret;
+}
+"""
+    kernel = parse_kernel(ptx)
+    flows = emulate(kernel)
+    # the tid<10 && tid>20 path is unrealizable: no flow reaches the load
+    for fr in flows:
+        assert not fr.loads(), "pruned path executed its load"
+
+
+def test_loop_abstraction_terminates():
+    """Backward branches (loops) must terminate via iterator abstraction."""
+    b = get_bench("matmul")
+    kernel = lower_to_ptx(b.program)
+    flows = emulate(kernel)
+    assert any(f.terminated in ("backedge", "memo", "ret") for f in flows)
+    # loads inside the loop appear with loop-UF addresses
+    loads = [l for f in flows for l in f.loads()]
+    assert loads
+
+
+def test_store_invalidation():
+    """A store that may alias a load kills its shuffle candidacy."""
+    ptx = """
+.visible .entry k(.param .u64 a){
+  .reg .b32 %r<8>; .reg .b64 %rd<8>; .reg .f32 %f<8>;
+  ld.param.u64 %rd1, [a]; cvta.to.global.u64 %rd2, %rd1;
+  mov.u32 %r1, %tid.x;
+  mul.wide.s32 %rd3, %r1, 4;
+  add.s64 %rd4, %rd2, %rd3;
+  ld.global.f32 %f1, [%rd4];
+  st.global.f32 [%rd4], %f1;
+  ld.global.f32 %f2, [%rd4+4];
+  st.global.f32 [%rd4+8], %f2;
+  ret;
+}
+"""
+    kernel = parse_kernel(ptx)
+    flows = emulate(kernel)
+    detection = detect(kernel, flows)
+    # the store between the loads may alias -> no shuffle between them
+    assert detection.n_shuffles == 0

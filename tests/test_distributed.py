@@ -1,0 +1,215 @@
+"""Distributed-layer tests.  Multi-device cases run in subprocesses so
+the main pytest process keeps a single CPU device (the dry-run policy:
+never set xla_force_host_platform_device_count globally)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+
+def _run(src: str, devices: int = 8) -> str:
+    code = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import sys
+        sys.path.insert(0, "src")
+    """) + textwrap.dedent(src)
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, cwd=__file__.rsplit("/tests", 1)[0],
+                         timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    return res.stdout
+
+
+def test_ring_attention_matches_dense():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.distributed import ring_attention
+        from repro.models.attention import AttnConfig, naive_attention
+        rng = np.random.default_rng(0)
+        mesh = make_mesh((2, 4), ("data", "model"))
+        B,S,H,KV,Dh = 2, 32, 4, 2, 16
+        q = jnp.asarray(rng.standard_normal((B,S,H,Dh)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((B,S,KV,Dh)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((B,S,KV,Dh)), jnp.float32)
+        cfg = AttnConfig(d_model=H*Dh, n_heads=H, n_kv_heads=KV, head_dim=Dh,
+                         rope_theta=0, causal=True)
+        ref = naive_attention(q, k, v, cfg)
+        out = ring_attention(q, k, v, mesh, axis="model")
+        err = float(jnp.max(jnp.abs(out - ref)))
+        assert err < 1e-5, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_moe_sharded_matches_dense():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import AxisType
+        from repro.launch.mesh import make_mesh
+        from repro.models.moe import init_moe, apply_moe_dense, apply_moe_sharded
+        from repro.models.common import unbox
+        mesh = make_mesh((4, 2), ("data", "model"))
+        E, k, D, F = 8, 2, 16, 32
+        params = unbox(init_moe(jax.random.PRNGKey(0), D, F, E, k))
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, D))
+        y_ref, _ = apply_moe_dense(params, x, k, E)
+        y_sh, _ = apply_moe_sharded(params, x, k, E, mesh,
+                                    capacity_factor=float(E)/k)
+        err = float(jnp.max(jnp.abs(y_ref - y_sh)))
+        assert err < 1e-5, err
+        # decode-like case: S=1 cannot shard over the tensor axis
+        x1 = jax.random.normal(jax.random.PRNGKey(2), (8, 1, D))
+        y_ref1, _ = apply_moe_dense(params, x1, k, E)
+        y_sh1, _ = apply_moe_sharded(params, x1, k, E, mesh,
+                                     capacity_factor=float(E)/k)
+        err1 = float(jnp.max(jnp.abs(y_ref1 - y_sh1)))
+        assert err1 < 1e-5, err1
+        print("OK", err, err1)
+    """)
+    assert "OK" in out
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.models.moe import init_moe, apply_moe_sharded
+        from repro.models.common import unbox
+        mesh = make_mesh((4, 2), ("data", "model"))
+        E, k, D, F = 8, 2, 16, 32
+        params = unbox(init_moe(jax.random.PRNGKey(0), D, F, E, k))
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, D))
+        # tiny capacity: result finite, not exact (drops are zeros)
+        y, aux = apply_moe_sharded(params, x, k, E, mesh, capacity_factor=0.5)
+        assert bool(jnp.all(jnp.isfinite(y))) and bool(jnp.isfinite(aux))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_pipeline_matches_sequential():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.distributed import pipeline_apply
+        rng = np.random.default_rng(0)
+        mesh = make_mesh((4,), ("stage",))
+        W = jnp.asarray(rng.standard_normal((4, 8, 8)) * 0.3, jnp.float32)
+        x = jnp.asarray(rng.standard_normal((6, 3, 8)), jnp.float32)
+        out = pipeline_apply(lambda w, x: jnp.tanh(x @ w), W, x, mesh)
+        seq = x
+        for i in range(4):
+            seq = jnp.tanh(seq @ W[i])
+        err = float(jnp.max(jnp.abs(out - seq)))
+        assert err < 1e-6, err
+        print("OK", err)
+    """, devices=4)
+    assert "OK" in out
+
+
+def test_compression_bounds_and_ef():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.distributed import pod_compressed_mean, ef_compressed_mean
+        rng = np.random.default_rng(0)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        g = {"w": jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)}
+        gm = pod_compressed_mean(g, mesh)
+        # replicated grads: compressed mean == identity up to quant step
+        bound = float(jnp.max(jnp.abs(g["w"]))) / 127 + 1e-7
+        err = float(jnp.max(jnp.abs(gm["w"] - g["w"])))
+        assert err <= bound, (err, bound)
+        r0 = jax.tree_util.tree_map(jnp.zeros_like, g)
+        gm2, r1 = ef_compressed_mean(g, r0, mesh)
+        # EF invariant: sent + residual == corrected signal
+        sent = gm2["w"]   # equals dequantized send here (identical pods)
+        np.testing.assert_allclose(np.asarray(sent + r1["w"]),
+                                   np.asarray(g["w"]), rtol=1e-5, atol=1e-6)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_fsdp_constraint_keeps_batch_sharded():
+    """Regression for the 75GB/device dry-run bug: activations inside the
+    layer scan must stay batch-sharded (constrain_batch)."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config, reduced
+        from repro.models import build_model, unbox
+        from repro.sharding import param_shardings, batch_sharding
+        mesh = make_mesh((4, 2), ("data", "model"))
+        cfg = reduced(get_config("olmo-1b")).replace(d_model=64, n_layers=2)
+        model = build_model(cfg, mesh)
+        boxed = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params = unbox(model.init(jax.random.PRNGKey(0)))
+        batch = {"tokens": jnp.zeros((8, 32), jnp.int32),
+                 "labels": jnp.zeros((8, 32), jnp.int32)}
+        loss, _ = jax.jit(model.loss)(params, batch)
+        assert bool(jnp.isfinite(loss))
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_ring_attention_model_integration():
+    """attn_impl='ring' (starcoder2's default) must equal blockwise
+    through the full model path."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config, reduced
+        from repro.models import build_model, unbox
+        mesh = make_mesh((2, 4), ("data", "model"))
+        rng = np.random.default_rng(0)
+        cfg0 = reduced(get_config("starcoder2-3b")).replace(q_block=8,
+                                                            kv_block=8)
+        B, S = 4, 32
+        toks = jnp.asarray(rng.integers(0, cfg0.vocab, (B, S)), jnp.int32)
+        batch = {"tokens": toks, "labels": toks}
+        outs = {}
+        for impl in ("blockwise", "ring"):
+            model = build_model(cfg0.replace(attn_impl=impl), mesh)
+            params = unbox(model.init(jax.random.PRNGKey(0)))
+            h, _ = jax.jit(model.hidden)(params, batch)
+            outs[impl] = np.asarray(h)
+        err = np.max(np.abs(outs["ring"] - outs["blockwise"]))
+        assert err < 1e-4, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_moe_dshard_matches_dense():
+    """The 2d_dshard schedule (kimi-class: F < D) must equal the dense
+    oracle when capacity is unconstrained."""
+    out = _run("""
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.models.moe import init_moe, apply_moe_dense, apply_moe_sharded
+        from repro.models.common import unbox
+        mesh = make_mesh((4, 2), ("data", "model"))
+        E, k, D, F = 8, 2, 16, 8        # F < D: the dshard regime
+        params = unbox(init_moe(jax.random.PRNGKey(0), D, F, E, k))
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, D))
+        y_ref, _ = apply_moe_dense(params, x, k, E)
+        y_ds, _ = apply_moe_sharded(params, x, k, E, mesh,
+                                    capacity_factor=float(E)/k,
+                                    schedule="2d_dshard")
+        err = float(jnp.max(jnp.abs(y_ref - y_ds)))
+        assert err < 1e-5, err
+        # auto rule picks dshard in this regime unless ep_tp qualifies
+        from repro.models.moe import choose_schedule
+        class M: shape = {"data": 16, "model": 16}
+        assert choose_schedule(384, 7168, 2048, M()) == "2d_dshard"
+        assert choose_schedule(32, 1024, 512, M()) == "ep_tp"
+        print("OK", err)
+    """)
+    assert "OK" in out

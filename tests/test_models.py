@@ -1,0 +1,173 @@
+"""Model-zoo tests: per-arch reduced-config smoke (forward/train step on
+CPU, shape + finiteness), serve-path consistency, blockwise attention
+and SSD equivalences, chunked CE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import all_configs, get_config, reduced
+from repro.models import build_model, chunked_ce_loss, unbox
+from repro.models.attention import AttnConfig, blockwise_attention, naive_attention
+from repro.models.mamba2 import SSMConfig, apply_mamba2, decode_step, init_mamba2, ssd_chunked
+
+RNG = np.random.default_rng(0)
+ARCHS = sorted(all_configs())
+
+
+def _batch(cfg, B, S):
+    b = {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32),
+         "labels": jnp.asarray(RNG.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.family == "vlm":
+        b["media"] = jnp.asarray(
+            RNG.standard_normal((B, cfg.n_media_tokens, cfg.d_model)),
+            jnp.float32)
+    if cfg.family == "audio":
+        b["frames"] = jnp.asarray(
+            RNG.standard_normal((B, cfg.n_frames, cfg.d_model)), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(arch):
+    """Reduced same-family config: one forward + backward step, finite."""
+    cfg = reduced(get_config(arch))
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    batch = _batch(cfg, 2, 32)
+    (loss, metrics), grads = jax.value_and_grad(
+        model.loss, has_aux=True)(params, batch)
+    assert jnp.isfinite(loss), arch
+    gnorm = sum(float(jnp.sum(jnp.square(g)))
+                for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_serve_consistency(arch):
+    """prefill+decode logits == full-forward logits at matching positions."""
+    cfg = reduced(get_config(arch)).replace(q_block=4, kv_block=4)
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    B, S = 2, 16
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+    batch = _batch(cfg, B, S)
+    batch["tokens"] = toks[:, :S]
+    h, _ = model.hidden(params, batch)
+    logits_full = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                             params["embed"]["table"].astype(jnp.float32))
+    b2 = dict(batch)
+    b2["tokens"] = toks[:, :S - 1]
+    lg_p, cache = model.prefill(params, b2, max_len=S)
+    np.testing.assert_allclose(np.asarray(lg_p),
+                               np.asarray(logits_full[:, S - 2]),
+                               rtol=1e-4, atol=1e-4)
+    lg_d, cache = model.decode_step(params, toks[:, S - 1], cache)
+    np.testing.assert_allclose(np.asarray(lg_d),
+                               np.asarray(logits_full[:, S - 1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_bf16_layer_scan_dtypes():
+    """Regression: bf16 configs must keep scan carries bf16 (the dry-run
+    failure class for mamba/zamba)."""
+    for arch in ("mamba2-1.3b", "zamba2-1.2b"):
+        cfg = reduced(get_config(arch)).replace(dtype="bfloat16")
+        model = build_model(cfg)
+        params = unbox(model.init(jax.random.PRNGKey(0)))
+        batch = _batch(cfg, 2, 32)
+        loss, _ = model.loss(params, batch)
+        assert jnp.isfinite(loss)
+
+
+# ---------------------------------------------------------------------------
+# attention equivalences
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.integers(9, 65), st.integers(1, 2),
+       st.booleans())
+def test_blockwise_equals_naive(B, S, KV, causal):
+    H, Dh = KV * 2, 8
+    cfg = AttnConfig(d_model=H * Dh, n_heads=H, n_kv_heads=KV, head_dim=Dh,
+                     rope_theta=0, causal=causal, q_block=16, kv_block=16)
+    q = jnp.asarray(RNG.standard_normal((B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((B, S, KV, Dh)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((B, S, KV, Dh)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(blockwise_attention(q, k, v, cfg)),
+        np.asarray(naive_attention(q, k, v, cfg)), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([16, 32]), st.sampled_from([4, 8]))
+def test_ssd_chunked_equals_sequential(B, L, chunk):
+    H, P, G, N = 4, 8, 1, 16
+    xh = jnp.asarray(RNG.standard_normal((B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (B, L, H)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(RNG.standard_normal((B, L, G, N)), jnp.float32)
+    Cm = jnp.asarray(RNG.standard_normal((B, L, G, N)), jnp.float32)
+    h = jnp.zeros((B, H, N, P))
+    ys = []
+    for t in range(L):
+        da = jnp.exp(dt[:, t] * A[None])
+        Bt = jnp.repeat(Bm[:, t], H // G, axis=1)
+        Ct = jnp.repeat(Cm[:, t], H // G, axis=1)
+        h = h * da[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bt, xh[:, t] * dt[:, t][..., None])
+        ys.append(jnp.einsum("bhn,bhnp->bhp", Ct, h))
+    y_ref = jnp.stack(ys, 1)
+    y, hf = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_decode_equals_full():
+    cfg = SSMConfig(d_model=32, d_state=16, head_dim=8, chunk=8)
+    params = unbox(init_mamba2(jax.random.PRNGKey(0), cfg))
+    B, L = 2, 16
+    x = jnp.asarray(RNG.standard_normal((B, L, 32)), jnp.float32)
+    full, (cs, ss) = apply_mamba2(params, x, cfg, return_state=True)
+    st_ = (jnp.zeros((B, cfg.conv_width - 1, cfg.conv_dim)),
+           jnp.zeros((B, cfg.n_heads, cfg.d_state, cfg.head_dim)))
+    outs = []
+    for t in range(L):
+        o, st_ = decode_step(params, x[:, t], st_, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_[1]), np.asarray(ss),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# chunked CE
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([8, 16, 32]), st.integers(0, 1))
+def test_chunked_ce_equals_full(B, S, masked):
+    V, D = 50, 12
+    table = jnp.asarray(RNG.standard_normal((V, D)), jnp.float32)
+    h = jnp.asarray(RNG.standard_normal((B, S, D)), jnp.float32)
+    labels = np.asarray(RNG.integers(0, V, (B, S)), np.int32)
+    if masked:
+        labels[:, : S // 2] = -1
+    labels = jnp.asarray(labels)
+    got = chunked_ce_loss(table, h, labels, chunk=8)
+    logits = jnp.einsum("bsd,vd->bsv", h, table)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                               axis=-1)[..., 0]
+    mask = (labels >= 0)
+    want = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)

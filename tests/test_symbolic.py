@@ -1,0 +1,153 @@
+"""Unit + property tests for the symbolic term algebra and SMT-lite solver."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.symbolic import (AssumptionSet, Cmp, Sym, Term, FALSE, TRUE,
+                                 solve_shift, to_signed)
+from repro.core.symbolic.solver import may_alias
+
+
+W = 32
+consts = st.integers(min_value=-(2**31), max_value=2**31 - 1)
+small = st.integers(min_value=-100, max_value=100)
+
+
+def t_const(v):
+    return Term.const_(v, W)
+
+
+@st.composite
+def affine_terms(draw):
+    syms = [Sym(f"s{i}", W) for i in range(3)]
+    t = t_const(draw(small))
+    for s in syms:
+        c = draw(small)
+        if c:
+            t = t.add(Term.atom(s, W).mul_const(c))
+    return t
+
+
+@settings(max_examples=50, deadline=None)
+@given(affine_terms(), affine_terms())
+def test_add_commutes(a, b):
+    assert a.add(b) == b.add(a)
+
+
+@settings(max_examples=50, deadline=None)
+@given(affine_terms(), affine_terms(), affine_terms())
+def test_add_associates(a, b, c):
+    assert a.add(b).add(c) == a.add(b.add(c))
+
+
+@settings(max_examples=50, deadline=None)
+@given(affine_terms())
+def test_sub_self_is_zero(a):
+    d = a.sub(a)
+    assert d.is_const and d.const == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(affine_terms(), small, small)
+def test_mul_const_distributes(a, k1, k2):
+    assert a.mul_const(k1).add(a.mul_const(k2)) == a.mul_const(k1 + k2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(consts)
+def test_signed_roundtrip(v):
+    assert to_signed(v & 0xFFFFFFFF, 32) == \
+        (v if -(2**31) <= v < 2**31 else to_signed(v & 0xFFFFFFFF, 32))
+
+
+# ---------------------------------------------------------------------------
+# solve_shift — the paper's delta equation (Section 5.1)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(-31, 31), st.integers(1, 16),
+       st.integers(-1000, 1000))
+def test_solve_shift_finds_planted_delta(n, stride_elems, base):
+    lane = Sym("tid.x", 64)
+    k = 4 * stride_elems
+    src = t_const64(base).add(Term.atom(lane, 64).mul_const(k))
+    dst = src.add(t_const64(n * k))     # dst(lane) == src(lane + n)
+    assert solve_shift(src, dst, lane) == n
+
+
+def t_const64(v):
+    return Term.const_(v, 64)
+
+
+def test_solve_shift_rejects_mismatched_stride():
+    lane = Sym("tid.x", 64)
+    src = Term.atom(lane, 64).mul_const(4)
+    dst = Term.atom(lane, 64).mul_const(8)
+    assert solve_shift(src, dst, lane) is None
+
+
+def test_solve_shift_rejects_lane_invariant():
+    lane = Sym("tid.x", 64)
+    other = Sym("j", 64)
+    src = Term.atom(other, 64).mul_const(4)
+    dst = src.add(t_const64(4))
+    assert solve_shift(src, dst, lane) is None
+
+
+def test_solve_shift_out_of_warp_range():
+    lane = Sym("tid.x", 64)
+    src = Term.atom(lane, 64).mul_const(4)
+    dst = src.add(t_const64(4 * 32))    # N = 32 > 31
+    assert solve_shift(src, dst, lane) is None
+
+
+def test_solve_shift_paper_worked_example():
+    """Section 5.1 worked example: two taps of the same row two lanes
+    apart solve to N = -2 (shfl.up by 2)."""
+    lane = Sym("tid.x", 64)             # paper's thread dim (i)
+    base = Sym("w0", 64)
+
+    def addr(di):
+        return (Term.atom(base, 64)
+                .add(Term.atom(lane, 64).mul_const(4))
+                .add(t_const64(4 * di)))
+
+    src = addr(+1)       # w0(i+1, .) loaded first (ascending order)
+    dst = addr(-1)       # w0(i-1, .) wants the value lane-2 already has
+    assert solve_shift(src, dst, lane) == -2
+
+
+# ---------------------------------------------------------------------------
+# assumption sets (branch pruning)
+# ---------------------------------------------------------------------------
+
+def test_assumptions_contradiction():
+    s = AssumptionSet()
+    x = Term.sym("x", 32)
+    assert s.add(Cmp("lt", x, t_const(10)))
+    assert not s.add(Cmp("gt", x, t_const(20)))
+
+
+def test_assumptions_entailment():
+    s = AssumptionSet()
+    x = Term.sym("x", 32)
+    assert s.add(Cmp("lt", x, t_const(10)))
+    assert s.implied(Cmp("lt", x, t_const(20))) is True
+    assert s.implied(Cmp("ge", x, t_const(10))) is False
+    assert s.implied(Cmp("lt", x, t_const(5))) is None
+
+
+def test_assumptions_eq_ne_interplay():
+    s = AssumptionSet()
+    x = Term.sym("y", 32)
+    assert s.add(Cmp("eq", x, t_const(7)))
+    assert s.implied(Cmp("ne", x, t_const(7))) is False
+    assert not s.add(Cmp("ne", x, t_const(7)))
+
+
+def test_may_alias():
+    a = Term.sym("p", 64)
+    assert may_alias(a, a)
+    assert not may_alias(a, a.add(Term.const_(4, 64)))
+    b = Term.sym("q", 64)
+    assert may_alias(a, b)      # unknown difference: conservative
