@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.frontend.kernelgen import get_bench
+from repro.core.frontend.pallas_lower import synthesize_tpu
+from repro.core.passes import GLOBAL_CACHE
 from repro.kernels.stencil import reference, stencil_apply, traffic_report
 from repro.kernels.conv1d import hbm_bytes as conv_bytes
 
@@ -30,6 +32,16 @@ def run() -> bool:
         b = get_bench(name)
         prog = b.program
         nd = prog.ndim
+        # detection via the cached analysis pipeline; a repeated plan
+        # request for the same program — the serving path — must be
+        # cache-served with zero re-emulation
+        plan = synthesize_tpu(prog, max_delta=b.max_delta)
+        hits_before = GLOBAL_CACHE.stats.hits
+        plan2 = synthesize_tpu(prog, max_delta=b.max_delta)
+        ok &= plan.consistent and plan2.consistent
+        ok &= GLOBAL_CACHE.stats.hits == hits_before + 1
+        emit(f"pallas.{name}.shuffles", plan.n_shuffles, "count",
+             "detection drives the VMEM row plan")
         t = traffic_report(prog, FULL_SHAPES[nd])
         emit(f"pallas.{name}.hbm_naive", t["naive"], "bytes",
              "one fetch per static load (paper Original)")
@@ -60,5 +72,9 @@ def run() -> bool:
     emit("pallas.conv1d.reduction", r, "x",
          "W=4 causal conv: one halo fetch vs 4 tap fetches")
     ok &= r > 3.5
+    stats = GLOBAL_CACHE.stats
+    emit("pallas.compile_cache.hits", stats.hits, "count")
+    emit("pallas.compile_cache.misses", stats.misses, "count")
+    emit("pallas.compile_cache.hit_rate", stats.hit_rate, "x")
     emit("pallas.STRUCTURE_OK", int(ok), "bool")
     return ok

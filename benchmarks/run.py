@@ -22,7 +22,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list of E1,E2,E3,E4,E5,E7")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="worker threads for per-kernel module compiles "
+                         "(default: one per kernel, capped at CPU count)")
     args = ap.parse_args()
+    from repro.core.passes import GLOBAL_CACHE, set_default_jobs
+    set_default_jobs(args.jobs)
     from . import (fig2_cycle_model, pallas_traffic, roofline,
                    sec85_applications, table1_latency, table2_kernelgen)
     suites = {
@@ -49,6 +54,9 @@ def main() -> None:
         ok_all &= bool(ok)
         print(f"{key}.{name}.ok,{int(bool(ok))},bool,"
               f"{time.time() - t0:.1f}s", flush=True)
+    stats = GLOBAL_CACHE.stats
+    print(f"compile_cache.hits,{stats.hits},count,", flush=True)
+    print(f"compile_cache.misses,{stats.misses},count,", flush=True)
     print(f"ALL.ok,{int(ok_all)},bool,", flush=True)
     sys.exit(0 if ok_all else 1)
 

@@ -14,6 +14,23 @@ from repro.core.emulator.cycles import LATENCY
 from .common import emit
 
 
+def _emit_pipeline_times() -> bool:
+    """Per-pass wall time of the middle-end on a representative kernel
+    (the compile-time side of the paper's analysis-time column)."""
+    from repro.core.frontend.stencil import lower_to_ptx
+    from repro.core.frontend.kernelgen import get_bench
+    from repro.core.passes import PassPipeline, PipelineConfig
+
+    kernel = lower_to_ptx(get_bench("jacobi").program)
+    pipeline = PassPipeline(config=PipelineConfig())
+    _, rep = pipeline.run_kernel(kernel, cache=None)   # uncached: measure
+    for pname, dt in rep.pass_times.items():
+        emit(f"table1.pipeline.{pname}.time", dt, "s")
+    emit("table1.pipeline.total_time", rep.total_time_s, "s",
+         "paper Table 2 analysis column analogue")
+    return rep.detection is not None and rep.detection.n_shuffles == 6
+
+
 def run() -> bool:
     ok = True
     for arch, row in LATENCY.items():
@@ -27,5 +44,6 @@ def run() -> bool:
     ok &= LATENCY["maxwell"]["l1"] / LATENCY["maxwell"]["shfl"] > 2
     ok &= LATENCY["pascal"]["l1"] / LATENCY["pascal"]["shfl"] > 2
     ok &= LATENCY["volta"]["l1"] / LATENCY["volta"]["shfl"] < 1.5
+    ok &= _emit_pipeline_times()
     emit("table1.STRUCTURE_OK", int(ok), "bool")
     return ok

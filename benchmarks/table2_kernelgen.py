@@ -6,18 +6,23 @@ paper's published Shuffle/Load and mean-|N| columns.
 
 from __future__ import annotations
 
-from repro.core.frontend.kernelgen import SUITE, all_benches
+from repro.core.frontend.kernelgen import all_benches
 from repro.core.frontend.stencil import lower_to_ptx
-from repro.core.synthesis.pipeline import ptxasw_kernel
+from repro.core.passes import compile_module
+from repro.core.ptx import Module
 
 from .common import emit
 
 
 def run() -> bool:
     ok_all = True
-    for name, b in all_benches().items():
-        kernel = lower_to_ptx(b.program)
-        _, rep = ptxasw_kernel(kernel, max_delta=b.max_delta)
+    # the whole suite as one 16-kernel module: kernels compile in
+    # parallel (``benchmarks.run --jobs N`` sets the worker count)
+    benches = all_benches()
+    module = Module(kernels=[lower_to_ptx(b.program)
+                             for b in benches.values()])
+    _, reports = compile_module(module)
+    for (name, b), rep in zip(benches.items(), reports):
         d = rep.detection
         got = (d.n_shuffles, d.n_loads)
         want = (b.expect_shuffles, b.expect_loads)

@@ -7,18 +7,15 @@ four negative results and their reasons.
 Run:  PYTHONPATH=src python examples/shuffle_suite.py
 """
 
-from repro.core.frontend.kernelgen import all_benches
-from repro.core.frontend.stencil import lower_to_ptx
-from repro.core.synthesis.pipeline import ptxasw_kernel
+from repro.core.frontend.kernelgen import all_benches, compile_bench
 
 
 def main():
     print(f"{'name':<14}{'lang':<6}{'shuffle/load':<14}{'delta':<8}"
           f"{'analysis':<10}{'paper':<12}match")
     all_ok = True
-    for name, b in all_benches(include_apps=True).items():
-        kernel = lower_to_ptx(b.program)
-        _, rep = ptxasw_kernel(kernel, max_delta=b.max_delta)
+    for name in all_benches(include_apps=True):
+        b, _, rep = compile_bench(name)
         d = rep.detection
         delta = f"{d.mean_abs_delta:.2f}" if d.mean_abs_delta is not None else "-"
         want_delta = (f"{b.expect_delta:.2f}"

@@ -1,0 +1,21 @@
+"""Compatibility shims for the installed jax version.
+
+The code targets the modern public API (``jax.shard_map`` with
+``check_vma``); older jax ships the same functionality as
+``jax.experimental.shard_map.shard_map`` with ``check_rep``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)

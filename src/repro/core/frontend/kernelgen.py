@@ -436,6 +436,24 @@ def get_bench(name: str) -> Bench:
     return APPLICATIONS[name]()
 
 
+def compile_bench(name: str, mode: str = "ptxasw"):
+    """Lower one suite benchmark and run it through the pass pipeline.
+
+    Returns ``(bench, synthesized_kernel, report)``.  Compilation goes
+    through the shared result cache, so repeated compilations of the
+    same benchmark (quickstart, Table 2, the traffic suite...) skip
+    re-emulation.
+    """
+    from ..passes import PipelineConfig, compile_kernel
+    from .stencil import lower_to_ptx
+
+    b = get_bench(name)
+    kernel = lower_to_ptx(b.program)
+    cfg = PipelineConfig(mode=mode, max_delta=b.max_delta)
+    synthesized, report = compile_kernel(kernel, cfg)
+    return b, synthesized, report
+
+
 def all_benches(include_apps: bool = False) -> Dict[str, Bench]:
     out = {name: fn() for name, fn in SUITE.items()}
     if include_apps:

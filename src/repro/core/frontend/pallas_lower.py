@@ -18,9 +18,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.emulator.machine import emulate
 from repro.core.frontend.stencil import Program, lower_to_ptx
-from repro.core.synthesis.detect import DetectionResult, detect
+from repro.core.passes import PipelineConfig, analyze_kernel
+from repro.core.synthesis.detect import DetectionResult
 from repro.kernels.stencil.stencil import FetchPlan, make_plan
 
 
@@ -44,8 +44,11 @@ def synthesize_tpu(prog: Program, max_delta: int = 31) -> TpuShufflePlan:
     """Run the full paper pipeline on the program's PTX lowering, then
     derive the detection-guided Pallas plan and cross-check them."""
     kernel = lower_to_ptx(prog)
-    flows = emulate(kernel)
-    detection = detect(kernel, flows, max_delta=max_delta)
+    # analysis-only pipeline (emulate + detect, no codegen) through the
+    # shared result cache: repeated plans for the same program — the
+    # serving / traffic paths — skip re-emulation entirely
+    report = analyze_kernel(kernel, PipelineConfig(max_delta=max_delta))
+    detection = report.detection
     try:
         plan = make_plan(prog, "paper")
     except ValueError:

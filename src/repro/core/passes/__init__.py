@@ -1,0 +1,82 @@
+"""Pass-manager middle-end: the extensible PTXASW compiler pipeline.
+
+Public API::
+
+    from repro.core.passes import (
+        compile_kernel, compile_module, compile_ptx, analyze_kernel,
+        KernelContext, PipelineConfig, PassPipeline, register_pass,
+        register_analysis, GLOBAL_CACHE,
+    )
+
+``compile_*`` run the default ``emulate-flows -> detect-shuffles ->
+synthesize-shuffles`` pipeline through the process-wide result cache;
+``analyze_kernel`` runs the analysis-only prefix (no codegen), which the
+TPU frontend uses to get detection without synthesizing PTX.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from ..ptx.ir import Kernel, Module
+from ..ptx.parser import parse
+from ..ptx.printer import print_module
+from .analyses import AliasFacts, BasicBlock, CFG  # noqa: F401
+from .cache import CacheStats, CompileCache, GLOBAL_CACHE  # noqa: F401
+from .context import (  # noqa: F401
+    ANALYSIS_REGISTRY,
+    KernelContext,
+    PipelineConfig,
+    register_analysis,
+)
+from .manager import (  # noqa: F401
+    ANALYSIS_PASSES,
+    DEFAULT_PASSES,
+    KernelReport,
+    PASS_REGISTRY,
+    Pass,
+    PassPipeline,
+    default_pipeline,
+    register_pass,
+    set_default_jobs,
+)
+from . import stages  # noqa: F401  (registers the built-in passes)
+
+
+def compile_kernel(kernel: Kernel, config: Optional[PipelineConfig] = None,
+                   *, cache: Optional[CompileCache] = GLOBAL_CACHE,
+                   pipeline: Optional[PassPipeline] = None
+                   ) -> Tuple[Kernel, KernelReport]:
+    """Run one kernel through the (default) middle-end pipeline."""
+    pipeline = pipeline or PassPipeline(config=config)
+    return pipeline.run_kernel(kernel, cache=cache)
+
+
+def compile_module(module: Module, config: Optional[PipelineConfig] = None,
+                   *, jobs: Optional[int] = None,
+                   cache: Optional[CompileCache] = GLOBAL_CACHE,
+                   pipeline: Optional[PassPipeline] = None
+                   ) -> Tuple[Module, List[KernelReport]]:
+    """Compile a whole module (kernels in parallel, directives preserved)."""
+    pipeline = pipeline or PassPipeline(config=config)
+    return pipeline.run_module(module, jobs=jobs, cache=cache)
+
+
+def compile_ptx(ptx_text: str, config: Optional[PipelineConfig] = None,
+                *, jobs: Optional[int] = None,
+                cache: Optional[CompileCache] = GLOBAL_CACHE
+                ) -> Tuple[str, List[KernelReport]]:
+    """PTX text in, synthesized PTX text out (the assembler-wrapper path)."""
+    module = parse(ptx_text)
+    out_module, reports = compile_module(module, config, jobs=jobs,
+                                         cache=cache)
+    return print_module(out_module), reports
+
+
+def analyze_kernel(kernel: Kernel, config: Optional[PipelineConfig] = None,
+                   *, cache: Optional[CompileCache] = GLOBAL_CACHE
+                   ) -> KernelReport:
+    """Emulate + detect only (no synthesis); returns the report."""
+    pipeline = PassPipeline(passes=ANALYSIS_PASSES, config=config)
+    _, report = pipeline.run_kernel(kernel, cache=cache)
+    return report

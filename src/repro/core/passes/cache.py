@@ -1,0 +1,86 @@
+"""Content-addressed result cache for the middle-end.
+
+Key = SHA-256 over (printed kernel PTX text, pipeline config token,
+pass list).  Value = (synthesized kernel, report).  Kernels are deep-
+copied on both put and get so neither the pipeline nor its callers can
+mutate a cached entry; reports are returned with ``cached=True``.
+
+The cache is what lets the serving / benchmark paths compile the same
+module repeatedly without re-running symbolic emulation (the dominant
+cost — the paper's Table 2 reports seconds-to-minutes per kernel).
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import hashlib
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+from ..ptx.ir import Kernel
+from .context import PipelineConfig
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class CompileCache:
+    """Thread-safe FIFO-bounded map: content hash -> (kernel, report)."""
+
+    def __init__(self, max_entries: int = 4096) -> None:
+        self.max_entries = max_entries
+        self._entries: "OrderedDict[str, Tuple[Kernel, object]]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    @staticmethod
+    def key(ptx_text: str, config: PipelineConfig,
+            pass_names: Sequence[str]) -> str:
+        payload = repr((ptx_text, config.cache_token(),
+                        tuple(pass_names))).encode()
+        return hashlib.sha256(payload).hexdigest()
+
+    def get(self, key: str) -> Optional[Tuple[Kernel, object]]:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.stats.misses += 1
+                return None
+            self.stats.hits += 1
+            kernel, report = entry
+            # copy the report too: its pass_times dict and detection
+            # object are mutable, and a shared reference would let one
+            # caller poison every later hit
+            return (copy.deepcopy(kernel),
+                    dataclasses.replace(copy.deepcopy(report), cached=True))
+
+    def put(self, key: str, kernel: Kernel, report: object) -> None:
+        with self._lock:
+            if key not in self._entries and \
+                    len(self._entries) >= self.max_entries:
+                self._entries.popitem(last=False)
+            self._entries[key] = (copy.deepcopy(kernel),
+                                  copy.deepcopy(report))
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+#: process-wide default cache shared by every pipeline invocation
+GLOBAL_CACHE = CompileCache()

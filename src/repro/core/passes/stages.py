@@ -1,0 +1,48 @@
+"""The PTXASW middle-end stages (paper Fig. 1) expressed as passes.
+
+``emulate-flows`` and ``detect-shuffles`` are analysis passes: they
+force context analyses and publish the detection product.
+``synthesize-shuffles`` is the transform: it rewrites the kernel and
+invalidates every analysis (the synthesized body has new uids, blocks
+and memory behaviour).
+
+Future optimizations (shared-memory shuffles, vectorized loads,
+cycle-model-guided selection) plug in here: register a pass, insert its
+name into the pipeline's pass list, and reuse the memoized analyses.
+"""
+
+from __future__ import annotations
+
+from .context import KernelContext
+from .manager import register_pass
+
+
+@register_pass("emulate-flows")
+class EmulateFlows:
+    """Force the symbolic-emulator flow analysis (Section 4)."""
+
+    def run(self, ctx: KernelContext) -> None:
+        ctx.get("flows")
+
+
+@register_pass("detect-shuffles")
+class DetectShuffles:
+    """Shuffle-pair detection (Section 5.1); publishes ``detection``."""
+
+    def run(self, ctx: KernelContext) -> None:
+        ctx.products["detection"] = ctx.get("detection")
+
+
+@register_pass("synthesize-shuffles")
+class SynthesizeShuffles:
+    """Rewrite covered loads into ``shfl.sync`` sequences (Section 5.2)."""
+
+    def run(self, ctx: KernelContext) -> None:
+        # late import: synthesis.__init__ imports the legacy wrapper,
+        # which imports this package
+        from ..synthesis.codegen import synthesize
+        detection = ctx.products.get("detection")
+        if detection is None:
+            detection = ctx.get("detection")
+        new_kernel = synthesize(ctx.kernel, detection, mode=ctx.config.mode)
+        ctx.replace_kernel(new_kernel)

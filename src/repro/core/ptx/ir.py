@@ -167,6 +167,11 @@ class Kernel:
 @dataclass
 class Module:
     kernels: List[Kernel] = field(default_factory=list)
+    # module-level directives as parsed from the source (None = the
+    # source declared none; the printer then falls back to defaults)
+    version: Optional[str] = None
+    target: Optional[str] = None
+    address_size: Optional[str] = None
 
     def kernel(self, name: str) -> Kernel:
         for k in self.kernels:

@@ -14,6 +14,9 @@ _PARAM = re.compile(r"\.param\s+\.(\w+)(?:\s+\.ptr[\w\s.]*)?\s+([\w$]+)(?:\[\d+\
 _REG_DECL = re.compile(r"\.reg\s+\.(\w+)\s+%([A-Za-z_]+)<(\d+)>\s*;")
 _REG_DECL_SINGLE = re.compile(r"\.reg\s+\.(\w+)\s+(%[\w.]+)\s*;")
 _LABEL = re.compile(r"^([$\w]+):\s*$")
+_VERSION = re.compile(r"\.version\s+([\d.]+)")
+_TARGET = re.compile(r"\.target\s+([\w ,]+)")
+_ADDR_SIZE = re.compile(r"\.address_size\s+(\d+)")
 _FLOAT_IMM = re.compile(r"^0[fF]([0-9A-Fa-f]{8})$")
 _DOUBLE_IMM = re.compile(r"^0[dD]([0-9A-Fa-f]{16})$")
 
@@ -91,6 +94,13 @@ def parse_instr(stmt: str) -> Instr:
 def parse(text: str) -> Module:
     text = _strip_comments(text)
     module = Module()
+    first_entry = _ENTRY.search(text)
+    header = text[:first_entry.start()] if first_entry else text
+    for regex, attr in ((_VERSION, "version"), (_TARGET, "target"),
+                        (_ADDR_SIZE, "address_size")):
+        m = regex.search(header)
+        if m:
+            setattr(module, attr, m.group(1).strip())
     pos = 0
     while True:
         m = _ENTRY.search(text, pos)

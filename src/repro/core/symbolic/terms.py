@@ -21,9 +21,16 @@ modulo ``2**width``; helpers expose the signed view.
 from __future__ import annotations
 
 import itertools
+import threading
 from typing import Dict, Iterable, Optional, Tuple
 
 _atom_counter = itertools.count()
+
+# guards the Sym/UF intern tables: module compilation fans kernels out
+# over threads (repro.core.passes), and a check-then-insert race would
+# mint two distinct atoms for one key, silently breaking the
+# "same address -> same value" identity that detection relies on
+_intern_lock = threading.Lock()
 
 
 def _mask(width: int) -> int:
@@ -62,11 +69,14 @@ class Sym(Atom):
         key = (name, width)
         inst = cls._interned.get(key)
         if inst is None:
-            inst = super().__new__(cls)
-            Atom.__init__(inst)
-            inst.name = name
-            inst.width = width
-            cls._interned[key] = inst
+            with _intern_lock:
+                inst = cls._interned.get(key)
+                if inst is None:
+                    inst = super().__new__(cls)
+                    Atom.__init__(inst)
+                    inst.name = name
+                    inst.width = width
+                    cls._interned[key] = inst
         return inst
 
     def __init__(self, name: str, width: int = 32) -> None:  # noqa: D401
@@ -93,12 +103,15 @@ class UF(Atom):
         key = (fn, args, width)
         inst = cls._interned.get(key)
         if inst is None:
-            inst = super().__new__(cls)
-            Atom.__init__(inst)
-            inst.fn = fn
-            inst.args = args
-            inst.width = width
-            cls._interned[key] = inst
+            with _intern_lock:
+                inst = cls._interned.get(key)
+                if inst is None:
+                    inst = super().__new__(cls)
+                    Atom.__init__(inst)
+                    inst.fn = fn
+                    inst.args = args
+                    inst.width = width
+                    cls._interned[key] = inst
         return inst
 
     def __init__(self, fn: str, args: Tuple["Term", ...], width: int = 32) -> None:

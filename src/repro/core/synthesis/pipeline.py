@@ -1,59 +1,42 @@
-"""PTXASW end-to-end pipeline: parse -> emulate -> detect -> synthesize.
+"""PTXASW compatibility wrappers over the pass-manager middle-end.
 
-Drop-in middle-end (paper Fig. 1): accepts PTX text from any frontend,
-returns shuffle-synthesized PTX text plus the analysis report.
+Historically this module *was* the middle-end: a hardcoded
+``parse -> emulate -> detect -> synthesize`` chain.  The chain now
+lives in :mod:`repro.core.passes` as an extensible pass pipeline with
+memoized analyses, a content-addressed result cache, and per-kernel
+parallel module compilation; ``ptxasw`` / ``ptxasw_kernel`` remain as
+thin wrappers so existing callers keep working unchanged.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
-from ..emulator.machine import emulate
-from ..ptx import Kernel, Module, parse, print_kernel, print_module
-from .codegen import synthesize
-from .detect import DetectionResult, detect
+from ..passes import (
+    KernelReport,
+    PipelineConfig,
+    compile_kernel,
+    compile_ptx,
+)
+from ..ptx import Kernel
 
-
-@dataclass
-class KernelReport:
-    name: str
-    detection: DetectionResult
-    emulate_time_s: float
-    total_time_s: float
-
-    @property
-    def summary(self) -> str:
-        d = self.detection
-        delta = f"{d.mean_abs_delta:.2f}" if d.mean_abs_delta is not None else "-"
-        return (f"{self.name}: shuffle/load {d.n_shuffles}/{d.n_loads} "
-                f"delta {delta} flows {d.n_flows} "
-                f"analysis {self.total_time_s:.3f}s")
+__all__ = ["KernelReport", "ptxasw", "ptxasw_kernel"]
 
 
 def ptxasw_kernel(kernel: Kernel, mode: str = "ptxasw",
                   max_delta: int = 31) -> Tuple[Kernel, KernelReport]:
-    t0 = time.perf_counter()
-    flows = emulate(kernel)
-    t1 = time.perf_counter()
-    detection = detect(kernel, flows, max_delta=max_delta)
-    synthesized = synthesize(kernel, detection, mode=mode)
-    t2 = time.perf_counter()
-    report = KernelReport(name=kernel.name, detection=detection,
-                          emulate_time_s=t1 - t0, total_time_s=t2 - t0)
-    return synthesized, report
+    """Compatibility wrapper: one kernel through the default pipeline."""
+    return compile_kernel(kernel,
+                          PipelineConfig(mode=mode, max_delta=max_delta))
 
 
 def ptxasw(ptx_text: str, mode: str = "ptxasw",
            max_delta: int = 31) -> Tuple[str, List[KernelReport]]:
-    """The assembler-wrapper entry point: PTX text in, PTX text out."""
-    module = parse(ptx_text)
-    out = Module()
-    reports = []
-    for kernel in module.kernels:
-        new_kernel, report = ptxasw_kernel(kernel, mode=mode,
-                                           max_delta=max_delta)
-        out.kernels.append(new_kernel)
-        reports.append(report)
-    return print_module(out), reports
+    """The assembler-wrapper entry point: PTX text in, PTX text out.
+
+    The parsed module is routed through the pipeline intact, so module
+    directives (``.version`` / ``.target`` / ``.address_size``) and any
+    other non-kernel state survive the rewrite.
+    """
+    return compile_ptx(ptx_text,
+                       PipelineConfig(mode=mode, max_delta=max_delta))

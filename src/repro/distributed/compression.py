@@ -21,6 +21,8 @@ from __future__ import annotations
 from typing import Any, Tuple
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -49,7 +51,7 @@ def pod_compressed_mean(grads: Any, mesh, axis: str = "pod") -> Any:
         return jax.tree_util.tree_map(leaf_fn, grads)
 
     spec = jax.tree_util.tree_map(lambda _: P(), grads)
-    return jax.shard_map(local, mesh=mesh, in_specs=(spec,),
+    return shard_map(local, mesh=mesh, in_specs=(spec,),
                          out_specs=spec, check_vma=False)(grads)
 
 
@@ -73,6 +75,6 @@ def ef_compressed_mean(grads: Any, residual: Any, mesh,
         return means, resid
 
     spec = jax.tree_util.tree_map(lambda _: P(), grads)
-    return jax.shard_map(local, mesh=mesh, in_specs=(spec, spec),
+    return shard_map(local, mesh=mesh, in_specs=(spec, spec),
                          out_specs=(spec, spec), check_vma=False)(
                              grads, residual)

@@ -13,6 +13,8 @@ from __future__ import annotations
 from typing import Any, Callable
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -63,6 +65,6 @@ def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jnp.ndarray,
         return outs
 
     pspec = jax.tree_util.tree_map(lambda _: P(axis), stage_params)
-    return jax.shard_map(local, mesh=mesh,
+    return shard_map(local, mesh=mesh,
                          in_specs=(pspec, P()), out_specs=P(),
                          check_vma=False)(stage_params, x)

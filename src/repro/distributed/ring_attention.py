@@ -23,6 +23,8 @@ import math
 from typing import Tuple
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -88,7 +90,7 @@ def ring_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sl, H, Dh)
         return out.astype(q.dtype)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(None, axis), P(None, axis), P(None, axis)),
         out_specs=P(None, axis), check_vma=False)(q, k, v)

@@ -32,6 +32,8 @@ import math
 from typing import Tuple
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -216,7 +218,7 @@ def apply_moe_sharded(params: Params, x: jnp.ndarray, top_k: int,
         P(batch_spec, seq_spec, None),          # tokens
     )
     out_specs = (P(batch_spec, seq_spec, None), P())
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(params["router"], params["w_gate"], params["w_up"],
               params["w_down"], x)
@@ -288,7 +290,7 @@ def _apply_moe_ep_tp(params: Params, x: jnp.ndarray, top_k: int,
         P(batch_spec, seq_spec, None),
     )
     out_specs = (P(batch_spec, seq_spec, None), P())
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(params["router"], params["w_gate"], params["w_up"],
               params["w_down"], x)
@@ -374,7 +376,7 @@ def _apply_moe_2d_dshard(params: Params, x: jnp.ndarray, top_k: int,
         P(batch_spec, None, tp_axis),          # tokens D-sharded
     )
     out_specs = (P(batch_spec, None, tp_axis), P())
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+    fn = shard_map(local_fn, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
     return fn(params["router"], params["w_gate"], params["w_up"],
               params["w_down"], x)

@@ -49,7 +49,6 @@ def test_ring_attention_matches_dense():
 def test_moe_sharded_matches_dense():
     out = _run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.launch.mesh import make_mesh
         from repro.models.moe import init_moe, apply_moe_dense, apply_moe_sharded
         from repro.models.common import unbox

@@ -1,0 +1,312 @@
+"""Pass-manager middle-end tests: analysis memoization + invalidation,
+the content-addressed result cache, compat-wrapper byte-identity with
+the legacy fixed chain, module-directive preservation, and the detect()
+cross-flow / alias-store rejection rules."""
+
+import pytest
+
+import repro.core.passes.analyses as analyses_mod
+from repro.core.emulator.machine import emulate
+from repro.core.frontend.kernelgen import get_bench
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.passes import (
+    ANALYSIS_PASSES,
+    CompileCache,
+    KernelContext,
+    PassPipeline,
+    PipelineConfig,
+    compile_kernel,
+    compile_ptx,
+)
+from repro.core.passes.stages import SynthesizeShuffles
+from repro.core.ptx import parse, parse_kernel, print_kernel, print_module
+from repro.core.synthesis.codegen import synthesize
+from repro.core.synthesis.detect import detect
+from repro.core.synthesis.pipeline import ptxasw, ptxasw_kernel
+
+
+def _count_emulate(monkeypatch):
+    """Patch the analyses module's emulate with a counting wrapper."""
+    calls = []
+
+    def counting(kernel, **kw):
+        calls.append(kernel.name)
+        return emulate(kernel, **kw)
+
+    monkeypatch.setattr(analyses_mod, "emulate", counting)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# KernelContext: memoization + invalidation
+# ---------------------------------------------------------------------------
+
+def test_analysis_memoized(monkeypatch):
+    calls = _count_emulate(monkeypatch)
+    ctx = KernelContext(lower_to_ptx(get_bench("jacobi").program))
+    flows1 = ctx.get("flows")
+    flows2 = ctx.get("flows")
+    det = ctx.get("detection")        # depends on flows: must reuse them
+    assert flows1 is flows2
+    assert len(calls) == 1
+    assert det.n_shuffles == 6
+    assert ctx.cached("flows") and ctx.cached("detection")
+
+
+def test_invalidation_after_transform(monkeypatch):
+    calls = _count_emulate(monkeypatch)
+    ctx = KernelContext(lower_to_ptx(get_bench("laplacian").program))
+    ctx.products["detection"] = ctx.get("detection")
+    assert len(calls) == 1
+    SynthesizeShuffles().run(ctx)
+    # the transform invalidated every kernel-keyed analysis...
+    assert not ctx.cached("flows") and not ctx.cached("detection")
+    # ...but products survive (they describe the run, not the new body)
+    assert ctx.products["detection"].n_shuffles == 2
+    ctx.get("flows")                  # recomputes on the rewritten kernel
+    assert len(calls) == 2
+
+
+def test_cfg_and_dominators():
+    ctx = KernelContext(lower_to_ptx(get_bench("jacobi").program))
+    cfg = ctx.get("cfg")
+    dom = ctx.get("dominators")
+    assert len(cfg.blocks) >= 2
+    assert cfg.block_of and len(cfg.block_of) == len(ctx.kernel.body)
+    # entry dominates itself only; every block is dominated by the entry
+    assert dom[cfg.entry] == {cfg.entry}
+    assert all(cfg.entry in dom[b.bid] or b.bid == cfg.entry
+               for b in cfg.blocks if b.preds or b.bid == cfg.entry)
+
+
+def test_cfg_predicated_ret_keeps_fallthrough():
+    ptx = """
+.visible .entry k(.param .u64 a){
+  .reg .pred %p<2>; .reg .b32 %r<4>; .reg .b64 %rd<6>; .reg .f32 %f<4>;
+  ld.param.u64 %rd1, [a]; cvta.to.global.u64 %rd2, %rd1;
+  mov.u32 %r1, %tid.x;
+  setp.lt.s32 %p1, %r1, 8;
+  @%p1 ret;
+  ld.global.f32 %f1, [%rd2];
+  st.global.f32 [%rd2], %f1;
+  ret;
+}
+"""
+    ctx = KernelContext(parse_kernel(ptx))
+    cfg = ctx.get("cfg")
+    dom = ctx.get("dominators")
+    # the block ending in the guarded ret must fall through, and the
+    # trailing block must be reachable (dominated by the entry)
+    guarded = cfg.blocks[0]
+    assert guarded.succs, "predicated ret dropped its fall-through edge"
+    tail = cfg.blocks[guarded.succs[0]]
+    assert cfg.entry in dom[tail.bid]
+
+
+def test_cached_report_is_isolated():
+    """Mutating a cache-served report must not poison later hits."""
+    cache = CompileCache()
+    kernel = lower_to_ptx(get_bench("jacobi").program)
+    cfg = PipelineConfig()
+    _, rep1 = compile_kernel(kernel, cfg, cache=cache)
+    rep1.pass_times.clear()
+    rep1.detection.pairs.clear()
+    _, rep2 = compile_kernel(kernel, cfg, cache=cache)
+    assert rep2.cached
+    assert rep2.pass_times and rep2.detection.n_shuffles == 6, \
+        "cache entry was mutated through a shared report reference"
+
+
+def test_alias_facts_match_store_blocking():
+    ptx = """
+.visible .entry k(.param .u64 a){
+  .reg .b32 %r<8>; .reg .b64 %rd<8>; .reg .f32 %f<8>;
+  ld.param.u64 %rd1, [a]; cvta.to.global.u64 %rd2, %rd1;
+  mov.u32 %r1, %tid.x;
+  mul.wide.s32 %rd3, %r1, 4;
+  add.s64 %rd4, %rd2, %rd3;
+  ld.global.f32 %f1, [%rd4];
+  st.global.f32 [%rd4], %f1;
+  ret;
+}
+"""
+    ctx = KernelContext(parse_kernel(ptx))
+    facts = ctx.get("alias")
+    flows = ctx.get("flows")
+    fid = next(fr.flow_id for fr in flows if fr.loads())
+    load = next(iter(flows)).loads()[0]
+    assert facts.clobbered(fid, load.order), \
+        "the same-address store must register as a may-alias clobber"
+
+
+# ---------------------------------------------------------------------------
+# result cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_skips_emulation(monkeypatch):
+    calls = _count_emulate(monkeypatch)
+    cache = CompileCache()
+    kernel = lower_to_ptx(get_bench("gaussblur").program)
+    text = print_module(parse(print_kernel(kernel)))
+
+    out1, reps1 = compile_ptx(text, cache=cache)
+    n_first = len(calls)
+    assert n_first > 0 and not reps1[0].cached
+    out2, reps2 = compile_ptx(text, cache=cache)
+    assert len(calls) == n_first, "second compile must not re-emulate"
+    assert reps2[0].cached
+    assert out2 == out1, "cached output must be byte-identical"
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+
+
+def test_cache_distinguishes_config_and_passes():
+    cache = CompileCache()
+    kernel = lower_to_ptx(get_bench("jacobi").program)
+    compile_kernel(kernel, PipelineConfig(mode="ptxasw"), cache=cache)
+    compile_kernel(kernel, PipelineConfig(mode="nocorner"), cache=cache)
+    pipeline = PassPipeline(passes=ANALYSIS_PASSES)
+    pipeline.run_kernel(kernel, cache=cache)
+    assert cache.stats.misses == 3 and cache.stats.hits == 0
+
+
+def test_cached_kernel_is_isolated():
+    """Mutating a cache-served kernel must not poison later hits."""
+    cache = CompileCache()
+    kernel = lower_to_ptx(get_bench("laplacian").program)
+    cfg = PipelineConfig()
+    out1, _ = compile_kernel(kernel, cfg, cache=cache)
+    out1.body.clear()
+    out2, rep2 = compile_kernel(kernel, cfg, cache=cache)
+    assert rep2.cached and out2.body, "cache entry was mutated by a caller"
+
+
+# ---------------------------------------------------------------------------
+# compat wrapper: byte-identity with the legacy fixed chain
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["jacobi", "gaussblur", "laplacian",
+                                  "whispering", "wave13pt"])
+def test_ptxasw_matches_legacy_chain(name):
+    b = get_bench(name)
+    kernel = lower_to_ptx(b.program)
+    # the pre-pass-manager chain, run by hand
+    legacy = synthesize(kernel,
+                        detect(kernel, emulate(kernel),
+                               max_delta=b.max_delta),
+                        mode="ptxasw")
+    via_pipeline, rep = ptxasw_kernel(kernel, max_delta=b.max_delta)
+    assert print_kernel(via_pipeline) == print_kernel(legacy)
+    assert rep.detection.n_shuffles == b.expect_shuffles
+
+
+def test_ptxasw_text_path_matches_legacy_chain():
+    kernel = lower_to_ptx(get_bench("jacobi").program)
+    text = print_module(parse(print_kernel(kernel)))
+    module = parse(text)
+    legacy_module = parse(text)
+    legacy_module.kernels = [
+        synthesize(k, detect(k, emulate(k)), mode="ptxasw")
+        for k in module.kernels
+    ]
+    out_text, _ = ptxasw(text)
+    assert out_text == print_module(legacy_module)
+
+
+def test_module_directives_preserved_through_pipeline():
+    kernel = lower_to_ptx(get_bench("vecadd").program)
+    text = (".version 8.2\n.target sm_90a\n.address_size 64\n\n"
+            + print_kernel(kernel))
+    out_text, _ = ptxasw(text)
+    assert ".version 8.2" in out_text
+    assert ".target sm_90a" in out_text
+    # defaults still apply when the source declared nothing
+    out_default, _ = ptxasw(print_kernel(kernel))
+    assert ".version 7.6" in out_default and ".target sm_70" in out_default
+
+
+def test_run_module_parallel_matches_serial():
+    texts = [print_kernel(lower_to_ptx(get_bench(n).program))
+             for n in ("jacobi", "laplacian", "gradient", "vecadd")]
+    module_text = ".version 7.6\n.target sm_70\n.address_size 64\n\n" \
+        + "\n".join(texts)
+    serial, _ = compile_ptx(module_text, jobs=1, cache=None)
+    parallel, reps = compile_ptx(module_text, jobs=4, cache=None)
+    assert parallel == serial
+    assert [r.name for r in reps] == ["jacobi", "laplacian",
+                                      "gradient", "vecadd"]
+
+
+# ---------------------------------------------------------------------------
+# detect(): cross-flow consistency + alias-store blocking
+# ---------------------------------------------------------------------------
+
+_CROSS_FLOW_TEMPLATE = """
+.visible .entry k(.param .u64 a){{
+  .reg .pred %p<2>; .reg .b32 %r<8>; .reg .b64 %rd<8>; .reg .f32 %f<4>;
+  ld.param.u64 %rd1, [a]; cvta.to.global.u64 %rd2, %rd1;
+  mov.u32 %r1, %tid.x;
+  mul.wide.s32 %rd3, %r1, 4;
+  add.s64 %rd4, %rd2, %rd3;
+  setp.lt.s32 %p1, %r1, 16;
+  @%p1 bra $A;
+  add.s64 %rd5, %rd4, {off_fall};
+  bra $J;
+$A:
+  add.s64 %rd5, %rd4, {off_taken};
+$J:
+  ld.global.f32 %f1, [%rd4];
+  ld.global.f32 %f2, [%rd5];
+  st.global.f32 [%rd2], %f2;
+  ret;
+}}
+"""
+
+
+def _detect_text(ptx):
+    kernel = parse_kernel(ptx)
+    return detect(kernel, emulate(kernel))
+
+
+def test_detect_cross_flow_disagreement_rejects_pair():
+    """Two flows reaching the same load with different deltas -> no pair."""
+    det = _detect_text(_CROSS_FLOW_TEMPLATE.format(off_fall=8, off_taken=4))
+    assert det.n_flows >= 2
+    assert det.n_shuffles == 0
+
+
+def test_detect_cross_flow_agreement_keeps_pair():
+    """Control: both flows agree on delta 1 -> the pair survives."""
+    det = _detect_text(_CROSS_FLOW_TEMPLATE.format(off_fall=4, off_taken=4))
+    assert det.n_flows >= 2
+    assert det.n_shuffles == 1
+    assert det.pairs[0].delta == 1
+
+
+_ALIAS_STORE_TEMPLATE = """
+.visible .entry k(.param .u64 a, .param .u64 b){{
+  .reg .b32 %r<8>; .reg .b64 %rd<10>; .reg .f32 %f<8>;
+  ld.param.u64 %rd1, [a]; cvta.to.global.u64 %rd2, %rd1;
+  ld.param.u64 %rd6, [b]; cvta.to.global.u64 %rd7, %rd6;
+  mov.u32 %r1, %tid.x;
+  mul.wide.s32 %rd3, %r1, 4;
+  add.s64 %rd4, %rd2, %rd3;
+  ld.global.f32 %f1, [%rd4];
+{store}  ld.global.f32 %f2, [%rd4+4];
+  st.global.f32 [%rd7+64], %f2;
+  ret;
+}}
+"""
+
+
+def test_detect_intervening_alias_store_blocks_pair():
+    """A store through another pointer may alias the source -> no pair."""
+    blocked = _ALIAS_STORE_TEMPLATE.format(
+        store="  st.global.f32 [%rd7], %f1;\n")
+    det = _detect_text(blocked)
+    assert det.n_shuffles == 0
+
+
+def test_detect_no_store_keeps_pair():
+    det = _detect_text(_ALIAS_STORE_TEMPLATE.format(store=""))
+    assert det.n_shuffles == 1
+    assert det.pairs[0].delta == 1
