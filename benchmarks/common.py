@@ -27,12 +27,17 @@ def emit(name: str, value, unit: str = "", derived: str = "") -> None:
 
 
 def run_concrete_suite(bench, nx: int = 72, ny: int = 8, nz: int = 6,
-                       block_x: int = 64):
+                       block_x: int = 64, with_runner: bool = False):
     """Run a KernelGen benchmark through all four PTX versions on the
-    concrete warp emulator; returns {version: RunStats} (2D/3D only)."""
+    concrete warp emulator; returns {version: RunStats} (2D/3D only).
+
+    With ``with_runner=True`` also returns the original kernel and a
+    ``runner(kernel) -> RunStats`` closure over the same geometry, so
+    callers (fig2's per-target selection comparison) can emulate extra
+    synthesized variants without duplicating the parameter setup.
+    """
     import numpy as np
     from repro.core.frontend.stencil import lower_to_ptx
-    from repro.core.synthesis.pipeline import ptxasw_kernel
     from repro.core.synthesis.codegen import synthesize
     from repro.core.emulator.machine import emulate
     from repro.core.synthesis.detect import detect
@@ -54,10 +59,7 @@ def run_concrete_suite(bench, nx: int = 72, ny: int = 8, nz: int = 6,
                 np.zeros(shape[-adim:], np.float32)
         for i in range(nd):
             p[f"n{i}"] = shape[::-1][i] if nd > 1 else shape[0]
-        # scalars
-        import struct
         for s in prog.scalars:
-            import numpy as _np
             p[s] = int(np.frombuffer(
                 np.float32(0.3).tobytes(), np.uint32)[0])
         return p
@@ -73,12 +75,15 @@ def run_concrete_suite(bench, nx: int = 72, ny: int = 8, nz: int = 6,
         nctaid = (nbx, shape[1] - 2 * prog.halo[1],
                   shape[0] - 2 * prog.halo[2])
 
+    def runner(k):
+        return run_concrete(k, params(), ntid=(block_x, 1, 1),
+                            nctaid=nctaid)
+
     versions = {"original": kernel}
     for mode, vname in (("noload", "noload"), ("nocorner", "nocorner"),
                         ("ptxasw", "ptxasw")):
         versions[vname] = synthesize(kernel, detection, mode=mode)
-    stats = {}
-    for vname, k in versions.items():
-        stats[vname] = run_concrete(k, params(), ntid=(block_x, 1, 1),
-                                    nctaid=nctaid)
+    stats = {vname: runner(k) for vname, k in versions.items()}
+    if with_runner:
+        return stats, detection, kernel, runner
     return stats, detection

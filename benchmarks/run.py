@@ -57,6 +57,9 @@ def main() -> None:
     stats = GLOBAL_CACHE.stats
     print(f"compile_cache.hits,{stats.hits},count,", flush=True)
     print(f"compile_cache.misses,{stats.misses},count,", flush=True)
+    print(f"compile_cache.hit_rate,{stats.hit_rate:.4f},ratio,"
+          f"{stats.summary}", flush=True)
+    print(f"compile_cache.evictions,{stats.evictions},count,", flush=True)
     print(f"ALL.ok,{int(ok_all)},bool,", flush=True)
     sys.exit(0 if ok_all else 1)
 

@@ -1,15 +1,17 @@
 """E4 — Table 1 latency inputs + per-op cycle-model microbenchmark.
 
 Table 1 itself is an *input* to the cycle model (we cannot measure GPU
-latencies here), so this benchmark (a) echoes the calibration, and
-(b) derives the paper's headline ratio — on which architectures a
-shuffle is cheaper than the cache hit it replaces — which drives every
-Figure 2 outcome.
+latencies here), so this benchmark (a) echoes the calibration for every
+registered target profile — paper Table 1 rows plus the extrapolated
+Ampere/Hopper entries — and (b) derives the paper's headline ratio — on
+which architectures a shuffle is cheaper than the cache hit it
+replaces — which drives every Figure 2 outcome and the
+``select-shuffles`` cost gate.
 """
 
 from __future__ import annotations
 
-from repro.core.emulator.cycles import LATENCY
+from repro.core.targets import all_targets, get_target
 
 from .common import emit
 
@@ -33,17 +35,22 @@ def _emit_pipeline_times() -> bool:
 
 def run() -> bool:
     ok = True
-    for arch, row in LATENCY.items():
-        emit(f"table1.{arch}.shuffle", row["shfl"], "cycles", "[16,33]")
-        emit(f"table1.{arch}.sm_read", row["sm"], "cycles")
-        emit(f"table1.{arch}.l1_hit", row["l1"], "cycles")
-        ratio = row["l1"] / row["shfl"]
-        emit(f"table1.{arch}.l1_over_shuffle", ratio, "x",
-             "paper: >1 => shuffle profitable as register cache")
-    # paper's reading: Maxwell/Pascal strongly favourable, Volta marginal
-    ok &= LATENCY["maxwell"]["l1"] / LATENCY["maxwell"]["shfl"] > 2
-    ok &= LATENCY["pascal"]["l1"] / LATENCY["pascal"]["shfl"] > 2
-    ok &= LATENCY["volta"]["l1"] / LATENCY["volta"]["shfl"] < 1.5
+    for prof in all_targets():
+        src = "[16,33]" if prof.calibration == "table1" else "extrapolated"
+        emit(f"table1.{prof.name}.sm", prof.sm, "cc", src)
+        emit(f"table1.{prof.name}.shuffle", prof.latency["shfl"],
+             "cycles", src)
+        emit(f"table1.{prof.name}.sm_read", prof.latency["sm"], "cycles")
+        emit(f"table1.{prof.name}.l1_hit", prof.latency["l1"], "cycles")
+        emit(f"table1.{prof.name}.l1_over_shuffle", prof.l1_over_shuffle,
+             "x", "paper: >1 => shuffle profitable as register cache")
+    # paper's reading: Maxwell/Pascal strongly favourable, Volta marginal,
+    # and the extrapolated generations follow Volta's fast-cache trend
+    ok &= get_target("maxwell").l1_over_shuffle > 2
+    ok &= get_target("pascal").l1_over_shuffle > 2
+    ok &= get_target("volta").l1_over_shuffle < 1.5
+    ok &= get_target("ampere").l1_over_shuffle < 1.5
+    ok &= get_target("hopper").l1_over_shuffle < 1.5
     ok &= _emit_pipeline_times()
     emit("table1.STRUCTURE_OK", int(ok), "bool")
     return ok

@@ -219,13 +219,16 @@ class ConcreteEmulator:
     # ------------------------------------------------------------------
     def _exec_shfl(self, instr: Instr, executing: List[_Thread],
                    warp: List[_Thread]) -> None:
-        mode = instr.parts[2] if len(instr.parts) > 2 else "idx"
+        parts = instr.parts
+        mode = next((p for p in parts[1:]
+                     if p in ("up", "down", "bfly", "idx")), "idx")
         ops = instr.operands
-        # forms: d, a, b, c, mask  |  d|p, a, b, c, mask
-        has_pred = len(ops) == 6
+        # sync forms:   d, a, b, c, mask   |  d|p, a, b, c, mask
+        # legacy forms: d, a, b, c         |  d|p, a, b, c
+        has_pred = len(ops) == (6 if "sync" in parts else 5)
         d = ops[0]
         pd = ops[1] if has_pred else None
-        a_i, b_i, _c_i = (2, 3, 4) if has_pred else (1, 2, 3)
+        a_i, b_i = (2, 3) if has_pred else (1, 2)
         lane_of = {id(t): warp.index(t) % 32 for t in executing}
         exec_lanes = {lane_of[id(t)]: t for t in executing}
         srcs = {lane_of[id(t)]: self._rd(t, ops[a_i], 32) for t in executing}

@@ -4,7 +4,8 @@ Substitutes for wall-clock GPU runs in this environment: the concrete
 warp emulator (:mod:`repro.core.emulator.concrete`) produces executed-
 event counts per kernel version (Original / NO LOAD / NO CORNER /
 PTXASW), and this model weights them with the per-architecture
-latencies the paper reports (Table 1 [16, 33]) to reproduce the
+latencies each :class:`~repro.core.targets.TargetProfile` carries
+(Table 1 [16, 33] for the measured generations) to reproduce the
 *structure* of Figure 2: which versions win on which generation, and
 why (Section 8's analysis: Maxwell/Pascal have L1-hit latencies ~2.5x
 the shuffle latency, Kepler/Volta do not).
@@ -13,38 +14,19 @@ This is a latency-weighted throughput model, not a simulator: each
 event class contributes its latency divided by the architecture's
 ability to hide it (ILP slots); numbers are meaningful as *ratios*
 between versions on one architecture, exactly how the paper uses
-Figure 2.
+Figure 2.  All architecture data comes from the target registry
+(:mod:`repro.core.targets`) — add a profile there and every consumer
+(this model, the selection pass, codegen, the benchmarks) picks it up.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+import math
+from typing import Dict, Optional, Sequence, Union
 
+from ..targets import TargetProfile, all_targets, resolve_target
 from .concrete import RunStats
-
-# Table 1 of the paper (clock cycles)
-LATENCY = {
-    #            shuffle  sm_read  l1_hit
-    "kepler":  dict(shfl=24, sm=26, l1=35),
-    "maxwell": dict(shfl=33, sm=23, l1=82),
-    "pascal":  dict(shfl=33, sm=24, l1=82),
-    "volta":   dict(shfl=22, sm=19, l1=28),
-}
-
-# issue-side costs (cycles per executed instruction), common across gens.
-# ALU is dual-issue (0.5 cyc/instr effective); FP32 pipes are modeled at
-# 1 cyc/instr with dependency stalls folded into the latency terms.
-ALU_COST = 0.5
-FALU_COST = 1.0
-BRANCH_COST = 2.0
-PRED_OFF_COST = 0.25       # issued-but-masked slot
-
-# memory-level parallelism: how many outstanding loads an SM overlaps.
-# Volta's scheduler hides more latency (Section 8.4: "minimal latency at
-# each operation"); Kepler the least (Section 8.1: long execution
-# dependencies).
-MLP = {"kepler": 4.0, "maxwell": 6.0, "pascal": 6.0, "volta": 8.0}
 
 
 @dataclasses.dataclass
@@ -54,32 +36,51 @@ class CycleReport:
     breakdown: Dict[str, float]
 
 
-def estimate_cycles(stats: RunStats, arch: str) -> CycleReport:
-    lat = LATENCY[arch]
-    mlp = MLP[arch]
+def estimate_cycles(stats: RunStats,
+                    arch: Union[str, TargetProfile]) -> CycleReport:
+    p = resolve_target(arch)
+    lat = p.latency
     counts = stats.counts
     br: Dict[str, float] = {}
-    br["load_global"] = counts.get("load_global", 0) * lat["l1"] / mlp
-    br["load_shared"] = counts.get("load_shared", 0) * lat["sm"] / mlp
+    br["load_global"] = counts.get("load_global", 0) * lat["l1"] / p.mlp
+    br["load_shared"] = counts.get("load_shared", 0) * lat["sm"] / p.mlp
     br["store"] = (counts.get("store_global", 0)
-                   + counts.get("store_shared", 0)) * lat["l1"] / mlp
+                   + counts.get("store_shared", 0)) * lat["l1"] / p.mlp
     # shuffles serialize with their consumers (execution dependency,
     # Section 8.1) — hidden less well than loads
-    br["shfl"] = counts.get("shfl", 0) * lat["shfl"] / min(mlp, 4.0)
-    br["alu"] = counts.get("alu", 0) * ALU_COST
-    br["falu"] = counts.get("falu", 0) * FALU_COST
-    br["branch"] = counts.get("branch", 0) * BRANCH_COST
-    br["pred_off"] = counts.get("pred_off", 0) * PRED_OFF_COST
-    return CycleReport(arch=arch, cycles=sum(br.values()), breakdown=br)
+    br["shfl"] = counts.get("shfl", 0) * lat["shfl"] / p.shfl_hide
+    br["alu"] = counts.get("alu", 0) * p.alu_cost
+    br["falu"] = counts.get("falu", 0) * p.falu_cost
+    br["branch"] = counts.get("branch", 0) * p.branch_cost
+    br["pred_off"] = counts.get("pred_off", 0) * p.pred_off_cost
+    return CycleReport(arch=p.name, cycles=sum(br.values()), breakdown=br)
 
 
-def speedup_table(stats_by_version: Dict[str, RunStats]) -> Dict[str, Dict[str, float]]:
-    """Figure-2-style table: arch -> version -> speedup vs original."""
+def speedup_table(stats_by_version: Dict[str, RunStats],
+                  targets: Optional[Sequence[Union[str, TargetProfile]]] = None
+                  ) -> Dict[str, Dict[str, float]]:
+    """Figure-2-style table: arch -> version -> speedup vs original.
+
+    ``targets`` defaults to every registered profile.  Raises
+    :class:`ValueError` when the ``"original"`` baseline is missing; a
+    version whose estimated cycles are 0 reports ``inf`` (or 1.0 when
+    the baseline is also 0) instead of dividing by zero.
+    """
+    if "original" not in stats_by_version:
+        raise ValueError(
+            "speedup_table needs an 'original' baseline version; got "
+            f"{sorted(stats_by_version)}")
+    profiles = ([resolve_target(t) for t in targets]
+                if targets is not None else all_targets())
     out: Dict[str, Dict[str, float]] = {}
-    for arch in LATENCY:
-        base = estimate_cycles(stats_by_version["original"], arch).cycles
-        out[arch] = {
-            version: base / estimate_cycles(stats, arch).cycles
-            for version, stats in stats_by_version.items()
-        }
+    for p in profiles:
+        base = estimate_cycles(stats_by_version["original"], p).cycles
+        row: Dict[str, float] = {}
+        for version, stats in stats_by_version.items():
+            cycles = estimate_cycles(stats, p).cycles
+            if cycles == 0.0:
+                row[version] = math.inf if base > 0.0 else 1.0
+            else:
+                row[version] = base / cycles
+        out[p.name] = row
     return out

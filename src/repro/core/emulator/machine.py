@@ -393,10 +393,15 @@ class SymbolicEmulator:
             d = instr.operands[0]
             rest = instr.operands[1:]
             pred_dst = None
-            if len(rest) >= 5:  # %d|%p form parsed into two regs
+            # sync forms carry a trailing membermask operand; legacy
+            # (pre-sm_70) forms do not
+            plain_ops = 4 if "sync" in parts else 3
+            if len(rest) > plain_ops:  # %d|%p form parsed into two regs
                 pred_dst, rest = rest[0], rest[1:]
+            mode = next((p for p in parts[1:]
+                         if p in ("up", "down", "bfly", "idx")), "idx")
             args = tuple(self._read(flow, o, 32) for o in rest[:2])
-            val = Term.uf(f"shfl.{parts[2] if len(parts) > 2 else 'idx'}",
+            val = Term.uf(f"shfl.{mode}",
                           args + (Term.const_(next(_uf_counter), 32),), 32)
             self._store_result(flow, d, val, guard)
             if pred_dst is not None and isinstance(pred_dst, Reg) \

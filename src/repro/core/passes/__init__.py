@@ -4,23 +4,31 @@ Public API::
 
     from repro.core.passes import (
         compile_kernel, compile_module, compile_ptx, analyze_kernel,
+        compile_for_targets, TargetVariant,
         KernelContext, PipelineConfig, PassPipeline, register_pass,
         register_analysis, GLOBAL_CACHE,
     )
 
 ``compile_*`` run the default ``emulate-flows -> detect-shuffles ->
-synthesize-shuffles`` pipeline through the process-wide result cache;
-``analyze_kernel`` runs the analysis-only prefix (no codegen), which the
-TPU frontend uses to get detection without synthesizing PTX.
+select-shuffles -> synthesize-shuffles`` pipeline through the
+process-wide result cache; ``analyze_kernel`` runs the analysis-only
+prefix (no codegen), which the TPU frontend uses to get detection
+without synthesizing PTX; ``compile_for_targets`` produces
+per-architecture PTX variants in one call, sharing the
+target-independent emulate/detect prefix across targets.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+import concurrent.futures
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..ptx.ir import Kernel, Module
 from ..ptx.parser import parse
 from ..ptx.printer import print_module
+from ..targets import TargetProfile, resolve_target, target_names
 from .analyses import AliasFacts, BasicBlock, CFG  # noqa: F401
 from .cache import CacheStats, CompileCache, GLOBAL_CACHE  # noqa: F401
 from .context import (  # noqa: F401
@@ -32,6 +40,7 @@ from .context import (  # noqa: F401
 from .manager import (  # noqa: F401
     ANALYSIS_PASSES,
     DEFAULT_PASSES,
+    SYNTHESIS_PASSES,
     KernelReport,
     PASS_REGISTRY,
     Pass,
@@ -80,3 +89,88 @@ def analyze_kernel(kernel: Kernel, config: Optional[PipelineConfig] = None,
     pipeline = PassPipeline(passes=ANALYSIS_PASSES, config=config)
     _, report = pipeline.run_kernel(kernel, cache=cache)
     return report
+
+
+@dataclasses.dataclass
+class TargetVariant:
+    """One architecture's synthesized module."""
+
+    target: TargetProfile
+    ptx: str
+    reports: List[KernelReport]
+
+    @property
+    def n_shuffles(self) -> int:
+        return sum(r.detection.n_shuffles for r in self.reports
+                   if r.detection is not None)
+
+
+def _analysis_config(config: PipelineConfig) -> PipelineConfig:
+    """The target-independent view of a config: detection depends only
+    on ``max_delta`` and ``lane``, so normalizing everything else lets
+    all targets (and plain ``analyze_kernel`` calls) share one cache
+    entry per kernel.  The target is pinned to the default profile's
+    name (the same cache token as ``None``) so a module's ``.target``
+    directive cannot fork the shared prefix entry."""
+    from ..targets import default_target
+    return PipelineConfig(max_delta=config.max_delta, lane=config.lane,
+                          target=default_target().name)
+
+
+def compile_for_targets(ptx_text: str,
+                        targets: Optional[Sequence[
+                            Union[str, TargetProfile]]] = None,
+                        config: Optional[PipelineConfig] = None,
+                        *, selection: Optional[str] = None,
+                        jobs: Optional[int] = None,
+                        cache: Optional[CompileCache] = GLOBAL_CACHE
+                        ) -> Dict[str, TargetVariant]:
+    """Compile one PTX module into per-architecture variants.
+
+    The expensive, target-independent prefix (symbolic emulation +
+    detection) runs once per kernel; every target then replays only the
+    cheap selection + synthesis tail with its own profile (encoding,
+    warp width, cost model).  ``targets`` defaults to every registered
+    profile; ``selection`` overrides the config's candidate policy
+    (pass ``"cost"`` for cycle-model-guided per-target selection).
+    Returns ``{profile name: TargetVariant}`` in ascending sm order.
+    """
+    base = config or PipelineConfig()
+    if selection is not None:
+        base = dataclasses.replace(base, selection=selection)
+    profiles = [resolve_target(t)
+                for t in (targets if targets is not None else target_names())]
+    module = parse(ptx_text)
+
+    # the prefix dominates wall clock (symbolic emulation), so it fans
+    # out over kernels exactly like run_module before targets fan out
+    prefix = PassPipeline(passes=ANALYSIS_PASSES,
+                          config=_analysis_config(base))
+    prefix_module, prefix_reports = prefix.run_module(module, jobs=jobs,
+                                                      cache=cache)
+    del prefix_module  # analysis-only: kernels pass through unchanged
+    detections = {rep.name: rep.detection for rep in prefix_reports}
+
+    def build(profile: TargetProfile) -> TargetVariant:
+        cfg = dataclasses.replace(base, target=profile.name)
+        tail = PassPipeline(passes=SYNTHESIS_PASSES, config=cfg)
+        out = Module(kernels=[], version=profile.ptx_version,
+                     target=profile.sm_name,
+                     address_size=profile.address_size)
+        reports: List[KernelReport] = []
+        for kernel in module.kernels:
+            new_kernel, rep = tail.run_kernel(
+                kernel, cache=cache,
+                products={"detection": detections[kernel.name]})
+            out.kernels.append(new_kernel)
+            reports.append(rep)
+        return TargetVariant(target=profile, ptx=print_module(out),
+                             reports=reports)
+
+    n = jobs if jobs is not None else min(len(profiles), os.cpu_count() or 1)
+    if len(profiles) <= 1 or n <= 1:
+        variants = [build(p) for p in profiles]
+    else:
+        with concurrent.futures.ThreadPoolExecutor(max_workers=n) as ex:
+            variants = list(ex.map(build, profiles))
+    return {v.target.name: v for v in variants}

@@ -1,9 +1,12 @@
 """Content-addressed result cache for the middle-end.
 
 Key = SHA-256 over (printed kernel PTX text, pipeline config token,
-pass list).  Value = (synthesized kernel, report).  Kernels are deep-
-copied on both put and get so neither the pipeline nor its callers can
-mutate a cached entry; reports are returned with ``cached=True``.
+pass list).  Value = (synthesized kernel, report).  Eviction is true
+LRU: hits move the entry to the most-recently-used end, so hot kernels
+(the serving path recompiling one module) survive a scan of cold ones.
+Kernels are deep-copied on both put and get so neither the pipeline nor
+its callers can mutate a cached entry; reports are returned with
+``cached=True``.
 
 The cache is what lets the serving / benchmark paths compile the same
 module repeatedly without re-running symbolic emulation (the dominant
@@ -28,15 +31,21 @@ from .context import PipelineConfig
 class CacheStats:
     hits: int = 0
     misses: int = 0
+    evictions: int = 0
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    @property
+    def summary(self) -> str:
+        return (f"hits {self.hits} misses {self.misses} "
+                f"hit-rate {self.hit_rate:.1%} evictions {self.evictions}")
+
 
 class CompileCache:
-    """Thread-safe FIFO-bounded map: content hash -> (kernel, report)."""
+    """Thread-safe LRU-bounded map: content hash -> (kernel, report)."""
 
     def __init__(self, max_entries: int = 4096) -> None:
         self.max_entries = max_entries
@@ -58,6 +67,7 @@ class CompileCache:
                 self.stats.misses += 1
                 return None
             self.stats.hits += 1
+            self._entries.move_to_end(key)     # LRU: a hit is a touch
             kernel, report = entry
             # copy the report too: its pass_times dict and detection
             # object are mutable, and a shared reference would let one
@@ -69,9 +79,11 @@ class CompileCache:
         with self._lock:
             if key not in self._entries and \
                     len(self._entries) >= self.max_entries:
-                self._entries.popitem(last=False)
+                self._entries.popitem(last=False)   # least-recently used
+                self.stats.evictions += 1
             self._entries[key] = (copy.deepcopy(kernel),
                                   copy.deepcopy(report))
+            self._entries.move_to_end(key)
 
     def clear(self) -> None:
         with self._lock:

@@ -17,6 +17,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, FrozenSet, Iterable, Optional, Tuple
 
 from ..ptx.ir import Kernel
+from ..targets import resolve_target
 
 
 @dataclass(frozen=True)
@@ -31,9 +32,15 @@ class PipelineConfig:
     mode: str = "ptxasw"        # codegen ablation: ptxasw | nocorner | noload
     max_delta: int = 31         # |N| bound for shuffle detection
     lane: str = "tid.x"         # the lane dimension the solver shifts along
+    target: Optional[str] = None  # profile name / sm_XX; None = registry default
+    selection: str = "all"      # candidate policy: all | cost
 
     def cache_token(self) -> Tuple:
-        return (self.mode, self.max_delta, self.lane)
+        # the target participates as its *resolved* profile name so
+        # "sm_61", "pascal" and a module-directive resolution all share
+        # cache entries
+        return (self.mode, self.max_delta, self.lane,
+                resolve_target(self.target).name, self.selection)
 
 
 # ---------------------------------------------------------------------------

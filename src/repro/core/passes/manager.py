@@ -18,6 +18,7 @@ configuration and pass list.
 from __future__ import annotations
 
 import concurrent.futures
+import dataclasses
 import os
 import time
 from dataclasses import dataclass, field
@@ -25,6 +26,7 @@ from typing import Dict, List, Optional, Protocol, Sequence, Tuple, Type, Union
 
 from ..ptx.ir import Kernel, Module
 from ..ptx.printer import print_kernel
+from ..targets import resolve_target
 from .cache import CompileCache, GLOBAL_CACHE
 from .context import KernelContext, PipelineConfig
 
@@ -39,6 +41,8 @@ class KernelReport:
     total_time_s: float = 0.0
     pass_times: Dict[str, float] = field(default_factory=dict)
     cached: bool = False
+    target: Optional[str] = None              # resolved profile name
+    selection: Optional[object] = None        # targets.cost.SelectionReport
 
     @property
     def summary(self) -> str:
@@ -47,9 +51,12 @@ class KernelReport:
             return f"{self.name}: analysis {self.total_time_s:.3f}s"
         delta = f"{d.mean_abs_delta:.2f}" if d.mean_abs_delta is not None else "-"
         tag = " [cached]" if self.cached else ""
+        sel = self.selection
+        seltag = (f" sel {sel.n_kept}/{len(sel.scores)}@{sel.target}"
+                  if sel is not None else "")
         return (f"{self.name}: shuffle/load {d.n_shuffles}/{d.n_loads} "
                 f"delta {delta} flows {d.n_flows} "
-                f"analysis {self.total_time_s:.3f}s{tag}")
+                f"analysis {self.total_time_s:.3f}s{seltag}{tag}")
 
 
 class Pass(Protocol):
@@ -87,9 +94,11 @@ def _resolve(p: Union[str, Pass]) -> Pass:
 
 
 # the PTXASW middle-end (paper Fig. 1) expressed as passes; analysis-only
-# prefix reused by frontends that need detection without codegen
+# prefix reused by frontends that need detection without codegen, and by
+# compile_for_targets as the shared target-independent prefix
 ANALYSIS_PASSES: Tuple[str, ...] = ("emulate-flows", "detect-shuffles")
-DEFAULT_PASSES: Tuple[str, ...] = ANALYSIS_PASSES + ("synthesize-shuffles",)
+SYNTHESIS_PASSES: Tuple[str, ...] = ("select-shuffles", "synthesize-shuffles")
+DEFAULT_PASSES: Tuple[str, ...] = ANALYSIS_PASSES + SYNTHESIS_PASSES
 
 _DEFAULT_JOBS: Optional[int] = None
 
@@ -117,8 +126,18 @@ class PassPipeline:
 
     # ------------------------------------------------------------------
     def run_kernel(self, kernel: Kernel,
-                   cache: Optional[CompileCache] = None
+                   cache: Optional[CompileCache] = None,
+                   products: Optional[Dict[str, object]] = None
                    ) -> Tuple[Kernel, KernelReport]:
+        """Run the pass list over one kernel.
+
+        ``products`` pre-seeds the context's product map — the hook
+        ``compile_for_targets`` uses to share one target-independent
+        detection across per-target synthesis runs.  Seeded products
+        must be deterministic functions of the kernel text and the
+        config (detection is: kernel + ``max_delta`` + ``lane``), since
+        they do not participate in the cache key.
+        """
         key = None
         if cache is not None:
             key = cache.key(print_kernel(kernel), self.config,
@@ -128,6 +147,8 @@ class PassPipeline:
                 return hit
         t0 = time.perf_counter()
         ctx = KernelContext(kernel, self.config)
+        if products:
+            ctx.products.update(products)
         pass_times: Dict[str, float] = {}
         for p in self.passes:
             pt0 = time.perf_counter()
@@ -140,11 +161,25 @@ class PassPipeline:
             emulate_time_s=ctx.timing("flows"),
             total_time_s=time.perf_counter() - t0,
             pass_times=pass_times,
+            target=resolve_target(self.config.target).name,
+            selection=ctx.products.get("selection"),
         )
         out = ctx.kernel
         if cache is not None and key is not None:
             cache.put(key, out, report)
         return out, report
+
+    # ------------------------------------------------------------------
+    def for_module(self, module: Module) -> "PassPipeline":
+        """The pipeline to apply to ``module``: when the config names no
+        target, the module's parsed ``.target sm_XX`` directive elects
+        the profile (resolved through the registry, so the cache token
+        is the same as naming the profile explicitly)."""
+        if self.config.target is not None or not module.target:
+            return self
+        return PassPipeline(
+            passes=self.passes,
+            config=dataclasses.replace(self.config, target=module.target))
 
     # ------------------------------------------------------------------
     def run_module(self, module: Module, jobs: Optional[int] = None,
@@ -154,8 +189,11 @@ class PassPipeline:
 
         Kernels are independent, so with more than one of them the work
         fans out over a thread pool (``jobs`` workers; defaults to the
-        process-wide setting, then to the CPU count).
+        process-wide setting, then to the CPU count).  The module's
+        ``.target`` directive selects the target profile unless the
+        config already names one (:meth:`for_module`).
         """
+        pipeline = self.for_module(module)
         kernels = module.kernels
         n = jobs if jobs is not None else _DEFAULT_JOBS
         if n is None:
@@ -164,11 +202,11 @@ class PassPipeline:
                      target=module.target,
                      address_size=module.address_size)
         if len(kernels) <= 1 or n <= 1:
-            results = [self.run_kernel(k, cache=cache) for k in kernels]
+            results = [pipeline.run_kernel(k, cache=cache) for k in kernels]
         else:
             with concurrent.futures.ThreadPoolExecutor(max_workers=n) as ex:
                 results = list(ex.map(
-                    lambda k: self.run_kernel(k, cache=cache), kernels))
+                    lambda k: pipeline.run_kernel(k, cache=cache), kernels))
         reports: List[KernelReport] = []
         for new_kernel, report in results:
             out.kernels.append(new_kernel)

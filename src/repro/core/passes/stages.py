@@ -2,13 +2,20 @@
 
 ``emulate-flows`` and ``detect-shuffles`` are analysis passes: they
 force context analyses and publish the detection product.
-``synthesize-shuffles`` is the transform: it rewrites the kernel and
-invalidates every analysis (the synthesized body has new uids, blocks
-and memory behaviour).
+``select-shuffles`` is the cost gate: with ``selection="cost"`` it
+scores each detected candidate with the target profile's cycle model
+and drops the ones the architecture is predicted to lose on (paper
+Sections 6-8: Maxwell/Pascal win, Kepler/Volta break even or lose);
+with the default ``selection="all"`` it keeps every candidate, which
+reproduces the paper's unconditional synthesis.
+``synthesize-shuffles`` is the transform: it rewrites the kernel with
+the target's encoding (``shfl.sync`` + membermask on sm_70+, legacy
+``shfl`` below) and invalidates every analysis (the synthesized body
+has new uids, blocks and memory behaviour).
 
-Future optimizations (shared-memory shuffles, vectorized loads,
-cycle-model-guided selection) plug in here: register a pass, insert its
-name into the pipeline's pass list, and reuse the memoized analyses.
+Future optimizations (shared-memory shuffles, vectorized loads) plug in
+here: register a pass, insert its name into the pipeline's pass list,
+and reuse the memoized analyses.
 """
 
 from __future__ import annotations
@@ -33,16 +40,41 @@ class DetectShuffles:
         ctx.products["detection"] = ctx.get("detection")
 
 
+def _detection(ctx: KernelContext):
+    detection = ctx.products.get("detection")
+    if detection is None:
+        detection = ctx.get("detection")
+        ctx.products["detection"] = detection
+    return detection
+
+
+@register_pass("select-shuffles")
+class SelectShuffles:
+    """Cost-model-guided candidate selection against the target profile."""
+
+    def run(self, ctx: KernelContext) -> None:
+        # late import: keeps the targets package import-light and avoids
+        # synthesis <-> passes import cycles
+        from ..targets.cost import select
+        detection = _detection(ctx)
+        if ctx.config.selection != "cost":
+            return
+        report = select(detection, ctx.config.target, mode=ctx.config.mode)
+        ctx.products["detection_all"] = detection
+        ctx.products["detection"] = report.selected
+        ctx.products["selection"] = report
+
+
 @register_pass("synthesize-shuffles")
 class SynthesizeShuffles:
-    """Rewrite covered loads into ``shfl.sync`` sequences (Section 5.2)."""
+    """Rewrite covered loads into shuffle sequences (Section 5.2)."""
 
     def run(self, ctx: KernelContext) -> None:
         # late import: synthesis.__init__ imports the legacy wrapper,
         # which imports this package
         from ..synthesis.codegen import synthesize
-        detection = ctx.products.get("detection")
-        if detection is None:
-            detection = ctx.get("detection")
-        new_kernel = synthesize(ctx.kernel, detection, mode=ctx.config.mode)
+        detection = _detection(ctx)
+        new_kernel = synthesize(ctx.kernel, detection,
+                                mode=ctx.config.mode,
+                                target=ctx.config.target)
         ctx.replace_kernel(new_kernel)

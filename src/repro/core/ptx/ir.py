@@ -43,11 +43,14 @@ class Imm:
     value: int          # raw bits for float immediates (0f... / 0d...)
     is_float: bool = False
     width: int = 32
+    hex: bool = False   # print as 0x... (e.g. shfl.sync membermasks)
 
     def __str__(self) -> str:
         if self.is_float:
             prefix = "0f" if self.width == 32 else "0d"
             return prefix + format(self.value, "08X" if self.width == 32 else "016X")
+        if self.hex and self.value >= 0:
+            return f"0x{self.value:x}"
         return str(self.value)
 
 

@@ -45,7 +45,7 @@ def _parse_operand(tok: str) -> object:
     if m:
         return Imm(int(m.group(1), 16), is_float=True, width=64)
     if re.match(r"^[+-]?(0[xX][0-9A-Fa-f]+|\d+)$", tok):
-        return Imm(int(tok, 0))
+        return Imm(int(tok, 0), hex=tok[:2].lower() == "0x")
     if tok.startswith("$") or (not tok.startswith("%") and tok.isupper() and tok not in ("WARP_SZ",)):
         return LabelRef(tok)
     return Reg(tok)

@@ -1,19 +1,25 @@
-"""Shuffle code generation (paper Section 5.2, Listing 6).
+"""Shuffle code generation (paper Section 5.2, Listing 6), target-aware.
 
 Rewrites the kernel body:
 
-* prologue (shared among shuffles): ``%wid = %tid.x % 32``
+* prologue (shared among shuffles): ``%wid = %tid.x % warp_width``
 * after each source load: ``mov`` capturing the loaded value
 * each covered load is replaced by::
 
-      activemask.b32 %m;
+      activemask.b32 %m;                      (ptxasw mode)
       setp.ne.s32  %incomplete, %m, -1;
-      setp.lt.u32  %oor, %wid, |N|;          (.up;  .down uses gt, 31-N)
+      setp.lt.u32  %oor, %wid, |N|;           (.up;  .down uses gt, W-1-N)
       or.pred      %pred, %incomplete, %oor;
-      shfl.sync.up.b32 %dst, %src, |N|, 0, %m;
-      @%pred ld.global... %dst, [addr];      (corner cases only)
+      shfl.sync.up.b32 %dst, %src, |N|, 0, 0xffffffff;   (sm_70+)
+      shfl.up.b32      %dst, %src, |N|, 0;               (sm_3x/5x/6x)
+      @%pred ld.global... %dst, [addr];       (corner cases only)
 
   ``N = 0`` degenerates to a plain ``mov`` (no shuffle).
+
+The target profile (:mod:`repro.core.targets`) decides the encoding:
+sm_70+ targets use ``shfl.sync`` with the full membermask, earlier
+generations the legacy unsynchronized ``shfl``; the warp width comes
+from the profile instead of literal 31/32.
 
 Modes reproduce the paper's ablations: ``ptxasw`` (full), ``nocorner``
 (shuffle only, no checker — invalid at boundaries), ``noload`` (covered
@@ -23,17 +29,21 @@ loads deleted — perf bound, invalid results).
 from __future__ import annotations
 
 import copy
-from typing import Dict, List
+from typing import Dict, List, Optional, Union
 
 from ..ptx.ir import Imm, Instr, Kernel, Label, MemRef, Reg
+from ..targets import TargetProfile, resolve_target
 from .detect import DetectionResult, ShufflePair
 
 MODES = ("ptxasw", "nocorner", "noload")
 
 
 def synthesize(kernel: Kernel, detection: DetectionResult,
-               mode: str = "ptxasw") -> Kernel:
+               mode: str = "ptxasw",
+               target: Union[TargetProfile, str, None] = None) -> Kernel:
     assert mode in MODES
+    profile = resolve_target(target)
+    width = profile.warp_width
     out = copy.deepcopy(kernel)
     if not detection.pairs:
         out.renumber()
@@ -45,8 +55,15 @@ def synthesize(kernel: Kernel, detection: DetectionResult,
     wid = out.new_reg("u32", hint="sflwid")
     prologue: List[Instr] = [
         Instr("mov.u32", [Reg(wid), Reg("%tid.x")]),
-        Instr("rem.u32", [Reg(wid), Reg(wid), Imm(32)]),
+        Instr("rem.u32", [Reg(wid), Reg(wid), Imm(width)]),
     ]
+    # the full-warp membermask assumes every lane reaches the shuffle;
+    # on real sm_70+ hardware an incomplete warp (exited lanes named in
+    # the mask) is undefined behaviour there, which is why the paper's
+    # Listing 6 passes the activemask register instead — the ptxasw
+    # checker below still detects incomplete warps and reloads, so the
+    # emulated data semantics are identical either way
+    membermask = Imm(profile.full_membermask, hex=True)
 
     # allocate capture regs per distinct source
     for p in detection.pairs:
@@ -83,30 +100,39 @@ def synthesize(kernel: Kernel, detection: DetectionResult,
                 new_body.append(Instr(f"mov.{t}", [dst, Reg(cap)]))
                 continue
             n = pair.delta
-            mask = out.new_reg("b32", hint="sflm")
-            new_body.append(Instr("activemask.b32", [Reg(mask)]))
             if mode == "ptxasw":
+                # the checker needs the active mask to detect incomplete
+                # warps (final-warp corner case, paper Listing 6)
+                mask = out.new_reg("b32", hint="sflm")
                 inc = out.new_reg("pred", hint="sflinc")
                 oor = out.new_reg("pred", hint="sfloor")
                 pred = out.new_reg("pred", hint="sflp")
+                new_body.append(Instr("activemask.b32", [Reg(mask)]))
+                # "incomplete warp" = active set != the profile's full
+                # warp (bitwise identical to the historical -1 compare
+                # at warp width 32)
                 new_body.append(Instr("setp.ne.s32",
-                                      [Reg(inc), Reg(mask), Imm(-1)]))
+                                      [Reg(inc), Reg(mask), membermask]))
                 if n < 0:
                     new_body.append(Instr("setp.lt.u32",
                                           [Reg(oor), Reg(wid), Imm(-n)]))
                 else:
                     new_body.append(Instr("setp.gt.u32",
-                                          [Reg(oor), Reg(wid), Imm(31 - n)]))
+                                          [Reg(oor), Reg(wid),
+                                           Imm(width - 1 - n)]))
                 new_body.append(Instr("or.pred",
                                       [Reg(pred), Reg(inc), Reg(oor)]))
             if n < 0:
-                new_body.append(Instr("shfl.sync.up.b32",
-                                      [dst, Reg(cap), Imm(-n), Imm(0),
-                                       Reg(mask)]))
+                shfl_ops = [dst, Reg(cap), Imm(-n), Imm(0)]
+                shfl_dir = "up"
             else:
-                new_body.append(Instr("shfl.sync.down.b32",
-                                      [dst, Reg(cap), Imm(n), Imm(31),
-                                       Reg(mask)]))
+                shfl_ops = [dst, Reg(cap), Imm(n), Imm(width - 1)]
+                shfl_dir = "down"
+            if profile.has_shfl_sync:
+                new_body.append(Instr(f"shfl.sync.{shfl_dir}.b32",
+                                      shfl_ops + [membermask]))
+            else:
+                new_body.append(Instr(f"shfl.{shfl_dir}.b32", shfl_ops))
             if mode == "ptxasw":
                 corner = copy.deepcopy(instr)
                 corner.pred = (False, pred)

@@ -10,7 +10,7 @@ thin wrappers so existing callers keep working unchanged.
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 from ..passes import (
     KernelReport,
@@ -24,19 +24,25 @@ __all__ = ["KernelReport", "ptxasw", "ptxasw_kernel"]
 
 
 def ptxasw_kernel(kernel: Kernel, mode: str = "ptxasw",
-                  max_delta: int = 31) -> Tuple[Kernel, KernelReport]:
+                  max_delta: int = 31, target: Optional[str] = None,
+                  selection: str = "all") -> Tuple[Kernel, KernelReport]:
     """Compatibility wrapper: one kernel through the default pipeline."""
     return compile_kernel(kernel,
-                          PipelineConfig(mode=mode, max_delta=max_delta))
+                          PipelineConfig(mode=mode, max_delta=max_delta,
+                                         target=target, selection=selection))
 
 
 def ptxasw(ptx_text: str, mode: str = "ptxasw",
-           max_delta: int = 31) -> Tuple[str, List[KernelReport]]:
+           max_delta: int = 31, target: Optional[str] = None,
+           selection: str = "all") -> Tuple[str, List[KernelReport]]:
     """The assembler-wrapper entry point: PTX text in, PTX text out.
 
     The parsed module is routed through the pipeline intact, so module
     directives (``.version`` / ``.target`` / ``.address_size``) and any
-    other non-kernel state survive the rewrite.
+    other non-kernel state survive the rewrite; the ``.target``
+    directive also elects the codegen profile unless ``target`` names
+    one explicitly.
     """
     return compile_ptx(ptx_text,
-                       PipelineConfig(mode=mode, max_delta=max_delta))
+                       PipelineConfig(mode=mode, max_delta=max_delta,
+                                      target=target, selection=selection))

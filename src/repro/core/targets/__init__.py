@@ -1,0 +1,31 @@
+"""Target subsystem: data-driven GPU architecture profiles.
+
+Public API::
+
+    from repro.core.targets import (
+        TargetProfile, register_target, resolve_target, get_target,
+        all_targets, target_names, default_target,
+    )
+
+Profiles (latency tables, hiding factors, warp geometry, ISA
+capabilities) are data; the cycle model, the ``select-shuffles`` pass,
+codegen, and the printer are the engines that consume them.  Cost
+scoring lives in :mod:`repro.core.targets.cost` (imported lazily by the
+passes to keep the package import-light).
+"""
+
+from .profile import TargetProfile  # noqa: F401
+from .registry import (  # noqa: F401
+    AMPERE,
+    HOPPER,
+    KEPLER,
+    MAXWELL,
+    PASCAL,
+    VOLTA,
+    all_targets,
+    default_target,
+    get_target,
+    register_target,
+    resolve_target,
+    target_names,
+)

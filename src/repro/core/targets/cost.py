@@ -1,0 +1,144 @@
+"""Cost-model-guided shuffle selection (the paper's Figure 2, inverted).
+
+The paper *measures* that shuffle synthesis is profitable on
+Maxwell/Pascal (L1-hit latency ~2.5x the shuffle latency) and break-even
+to harmful on Kepler/Volta (Sections 6-8).  This module turns that
+observation into an optimization input: each detected
+:class:`~repro.core.synthesis.detect.ShufflePair` is scored with the
+per-target cycle model — the predicted per-instance cycles of keeping
+the L1 load vs. of the synthesized replacement sequence — and
+unprofitable candidates are dropped before codegen.
+
+The per-pair closed form weights the event-count delta the rewrite
+induces in the concrete warp emulator
+(:mod:`repro.core.emulator.concrete`), with the same latency terms
+:func:`repro.core.emulator.cycles.estimate_cycles` applies to those
+counts; the capture ``mov`` a source shared by k pairs costs is split
+k ways, so per-pair profits sum to the whole-kernel cycle delta up to
+the constant 2-instruction prologue (which cannot reorder candidates).
+``measured_profit`` closes the loop: it diffs full concrete-emulation
+stats through the cycle model, which the tests use to check the static
+selection against emulated reality.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from dataclasses import dataclass
+from typing import List, Union
+
+from .profile import TargetProfile
+from .registry import resolve_target
+
+
+@dataclass(frozen=True)
+class PairScore:
+    """Predicted per-executed-instance cycles for one candidate."""
+
+    pair: object                  # synthesis.detect.ShufflePair
+    keep_load_cycles: float       # baseline: the covered L1 load stays
+    shuffled_cycles: float        # rewritten: shuffle + checker + corner
+
+    @property
+    def profit(self) -> float:
+        return self.keep_load_cycles - self.shuffled_cycles
+
+    @property
+    def profitable(self) -> bool:
+        return self.profit > 0.0
+
+
+@dataclass
+class SelectionReport:
+    """Outcome of the ``select-shuffles`` pass for one kernel."""
+
+    target: str
+    mode: str
+    scores: List[PairScore]
+    selected: object              # DetectionResult with the kept pairs
+
+    @property
+    def kept(self) -> List[object]:
+        return [s.pair for s in self.scores if s.profitable]
+
+    @property
+    def dropped(self) -> List[PairScore]:
+        return [s for s in self.scores if not s.profitable]
+
+    @property
+    def n_kept(self) -> int:
+        return len(self.kept)
+
+    @property
+    def n_dropped(self) -> int:
+        return len(self.scores) - self.n_kept
+
+    @property
+    def summary(self) -> str:
+        return (f"{self.target}: kept {self.n_kept}/{len(self.scores)} "
+                f"candidates (mode {self.mode})")
+
+
+def score_pair(pair, profile: Union[TargetProfile, str],
+               mode: str = "ptxasw", src_share: int = 1) -> PairScore:
+    """Score one candidate with the target's cycle model.
+
+    Mirrors, term by term, the event-count delta the synthesized
+    sequence (codegen Listing 6) induces per executed instance of the
+    covered load, weighted like ``estimate_cycles``:
+
+    * the L1 load disappears: ``- l1 / mlp``;
+    * a shuffle appears, serialized with its consumer: ``+ shfl / shfl_hide``;
+    * the source capture ``mov`` costs one ALU slot, split across the
+      ``src_share`` pairs reading the same capture (codegen emits it
+      once per distinct source);
+    * in ``ptxasw`` mode the checker (activemask + 2 setp + or.pred)
+      costs 4 ALU slots, the ``|N|/warp`` corner lanes reload through
+      L1, and the remaining lanes burn an issued-but-masked slot.
+    """
+    profile = resolve_target(profile)
+    lat = profile.latency
+    keep = lat["l1"] / profile.mlp
+    n = abs(pair.delta)
+    capture = profile.alu_cost / max(src_share, 1)
+    if mode == "noload":          # covered load deleted outright
+        return PairScore(pair, keep, 0.0)
+    if n == 0:                    # degenerate: plain mov from the capture
+        return PairScore(pair, keep, profile.alu_cost + capture)
+    cost = lat["shfl"] / profile.shfl_hide + capture
+    if mode == "ptxasw":
+        corner = min(n / profile.warp_width, 1.0)
+        cost += 4 * profile.alu_cost
+        cost += corner * keep
+        cost += (1.0 - corner) * profile.pred_off_cost
+    return PairScore(pair, keep, cost)
+
+
+def select(detection, target: Union[TargetProfile, str, None] = None,
+           mode: str = "ptxasw") -> SelectionReport:
+    """Drop the candidates the target's cycle model predicts to lose."""
+    from ..synthesis.detect import DetectionResult
+
+    profile = resolve_target(target)
+    sharers = Counter(p.src_uid for p in detection.pairs)
+    scores = [score_pair(p, profile, mode=mode,
+                         src_share=sharers[p.src_uid])
+              for p in detection.pairs]
+    kept = [s.pair for s in scores if s.profitable]
+    selected = DetectionResult(pairs=kept,
+                               n_loads=detection.n_loads,
+                               n_flows=detection.n_flows,
+                               analysis_time_s=detection.analysis_time_s)
+    return SelectionReport(target=profile.name, mode=mode,
+                           scores=scores, selected=selected)
+
+
+def measured_profit(base_stats, variant_stats,
+                    target: Union[TargetProfile, str, None] = None) -> float:
+    """Cycles saved by ``variant`` over ``base`` per the target's model,
+    from *concrete-emulation* event counts (positive = variant wins)."""
+    from ..emulator.cycles import estimate_cycles
+
+    profile = resolve_target(target)
+    return (estimate_cycles(base_stats, profile).cycles
+            - estimate_cycles(variant_stats, profile).cycles)

@@ -1,0 +1,360 @@
+"""Target-subsystem tests: registry resolution, target-aware codegen
+(golden ``shfl.sync`` vs legacy ``shfl`` encodings), cost-model-guided
+selection (per-target keep/drop agreeing with the concrete-emulation
+cycle model), ``compile_for_targets`` prefix sharing, the speedup-table
+guard rails, and LRU cache eviction."""
+
+import numpy as np
+import pytest
+
+import repro.core.passes.analyses as analyses_mod
+from repro.core.emulator.concrete import RunStats, run_concrete
+from repro.core.emulator.cycles import estimate_cycles, speedup_table
+from repro.core.emulator.machine import emulate
+from repro.core.frontend.kernelgen import get_bench
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.passes import (
+    CompileCache,
+    KernelReport,
+    PipelineConfig,
+    compile_for_targets,
+    compile_kernel,
+    compile_ptx,
+)
+from repro.core.ptx import parse_kernel, print_kernel, print_module
+from repro.core.ptx.ir import Module
+from repro.core.synthesis.codegen import synthesize
+from repro.core.synthesis.detect import detect
+from repro.core.targets import (
+    TargetProfile,
+    all_targets,
+    default_target,
+    get_target,
+    resolve_target,
+    target_names,
+)
+from repro.core.targets.cost import measured_profit, score_pair, select
+
+
+def _jacobi_kernel():
+    return lower_to_ptx(get_bench("jacobi").program)
+
+
+def _detection(kernel, max_delta=31):
+    return detect(kernel, emulate(kernel), max_delta=max_delta)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_paper_generations_plus_extrapolations():
+    names = target_names()
+    assert {"kepler", "maxwell", "pascal", "volta"} <= set(names)
+    assert len(names) >= 6
+    # Table 1 values survive the data-card encoding
+    volta = get_target("volta")
+    assert volta.latency == dict(shfl=22, sm=19, l1=28)
+    assert get_target("maxwell").latency["l1"] == 82
+    assert get_target("ampere").calibration == "extrapolated"
+
+
+def test_resolution_by_name_sm_and_directive():
+    assert resolve_target("pascal").name == "pascal"
+    assert resolve_target("sm_61").name == "pascal"
+    assert resolve_target("sm_75").name == "volta"       # nearest below
+    assert resolve_target("sm_999").name == "hopper"     # above the top
+    assert resolve_target("sm_30").name == "kepler"      # same ISA era
+    assert resolve_target("sm_90a, texmode_independent").name == "hopper"
+    assert resolve_target(None) is default_target()
+    prof = get_target("kepler")
+    assert resolve_target(prof) is prof
+    with pytest.raises(KeyError):
+        resolve_target("turing-ish")
+    with pytest.raises(KeyError, match="warp-shuffle"):
+        resolve_target("sm_20")                          # pre-shuffle ISA
+
+
+def test_default_target_matches_printer_fallback():
+    d = default_target()
+    text = print_module(Module())
+    assert f".target {d.sm_name}" in text
+    assert f".version {d.ptx_version}" in text
+    assert f".address_size {d.address_size}" in text
+
+
+# ---------------------------------------------------------------------------
+# target-aware codegen (golden encodings)
+# ---------------------------------------------------------------------------
+
+def test_codegen_sync_encoding_on_sm70_plus():
+    kernel = _jacobi_kernel()
+    det = _detection(kernel)
+    for name in ("volta", "ampere", "hopper"):
+        text = print_kernel(synthesize(kernel, det, target=name))
+        shfl_lines = [l for l in text.splitlines() if "shfl." in l]
+        assert shfl_lines, name
+        assert all("shfl.sync." in l and l.rstrip(";").endswith("0xffffffff")
+                   for l in shfl_lines), (name, shfl_lines)
+
+
+def test_codegen_legacy_encoding_below_sm70():
+    kernel = _jacobi_kernel()
+    det = _detection(kernel)
+    for name in ("kepler", "maxwell", "pascal"):
+        text = print_kernel(synthesize(kernel, det, target=name))
+        shfl_lines = [l for l in text.splitlines() if "shfl." in l]
+        assert shfl_lines, name
+        assert all("sync" not in l and "0xffffffff" not in l
+                   for l in shfl_lines), (name, shfl_lines)
+        # legacy form: dst, src, |N|, clamp — exactly 4 operands
+        assert all(len(l.split(",")) == 4 for l in shfl_lines)
+
+
+def test_codegen_warp_width_from_profile():
+    wide = TargetProfile(
+        name="wide64", sm=100, arch="hypothetical", warp_width=64,
+        latency=dict(shfl=20, sm=20, l1=30), mlp=8.0, has_shfl_sync=True)
+    kernel = _jacobi_kernel()
+    text = print_kernel(synthesize(kernel, _detection(kernel), target=wide))
+    assert "rem.u32 %sflwid0, %sflwid0, 64;" in text
+    assert "0xffffffffffffffff" in text          # full 64-lane membermask
+    assert ", 63," in text                       # down-clamp = width - 1
+
+
+def test_legacy_encoding_is_bit_exact_on_the_emulator():
+    b = get_bench("laplacian")
+    prog = b.program
+    kernel = lower_to_ptx(prog)
+    det = _detection(kernel, max_delta=b.max_delta)
+    assert det.n_shuffles > 0
+    legacy = synthesize(kernel, det, mode="ptxasw", target="maxwell")
+    nd = prog.ndim
+    shape = {2: (6, 70), 3: (5, 6, 70)}[nd]
+    h = prog.halo
+    grid = (-(-(shape[-1] - 2 * h[0]) // 64),
+            shape[-2] - 2 * h[1] if nd >= 2 else 1,
+            shape[0] - 2 * h[2] if nd == 3 else 1)
+    outs = []
+    for k in (kernel, legacy):
+        rng = np.random.default_rng(0)
+        params = {}
+        for arr, adim in prog.arrays.items():
+            params[arr] = (np.zeros(shape[-adim:], np.float32)
+                           if arr == prog.out.array else
+                           rng.standard_normal(shape[-adim:])
+                           .astype(np.float32))
+        for d in range(nd):
+            params[f"n{d}"] = shape[::-1][d]
+        for s in prog.scalars:
+            params[s] = int(np.frombuffer(
+                np.float32(0.3).tobytes(), np.uint32)[0])
+        stats = run_concrete(k, params, ntid=(64, 1, 1), nctaid=grid)
+        outs.append(params[prog.out.array].copy())
+    assert np.array_equal(outs[0], outs[1])
+    assert stats.get("shfl") > 0                 # the legacy form executed
+
+
+def test_module_target_directive_elects_profile():
+    kernel = _jacobi_kernel()
+    body = print_kernel(kernel)
+    legacy_out, _ = compile_ptx(
+        ".version 6.3\n.target sm_52\n.address_size 64\n\n" + body,
+        cache=None)
+    sync_out, _ = compile_ptx(
+        ".version 7.6\n.target sm_70\n.address_size 64\n\n" + body,
+        cache=None)
+    assert "shfl.down.b32" in legacy_out and "sync" not in legacy_out
+    assert "shfl.sync.down.b32" in sync_out
+    # explicit config target overrides the directive
+    forced, _ = compile_ptx(
+        ".version 6.3\n.target sm_52\n.address_size 64\n\n" + body,
+        PipelineConfig(target="volta"), cache=None)
+    assert "shfl.sync" in forced
+
+
+# ---------------------------------------------------------------------------
+# cost-model-guided selection
+# ---------------------------------------------------------------------------
+
+def test_select_pass_rejects_on_volta_keeps_on_pascal():
+    kernel = _jacobi_kernel()
+    results = {}
+    for name in ("volta", "pascal"):
+        out, rep = compile_kernel(
+            kernel, PipelineConfig(target=name, selection="cost"),
+            cache=None)
+        results[name] = (out, rep)
+    volta_rep = results["volta"][1]
+    pascal_rep = results["pascal"][1]
+    assert pascal_rep.selection.n_dropped == 0
+    assert pascal_rep.detection.n_shuffles == 6
+    assert volta_rep.selection.n_dropped >= 1
+    assert volta_rep.detection.n_shuffles < 6
+    # the dropped candidates exist in pascal's output, not volta's
+    assert "shfl." in print_kernel(results["pascal"][0])
+    assert "shfl" not in print_kernel(results["volta"][0])
+    assert volta_rep.target == "volta" and pascal_rep.target == "pascal"
+
+
+def test_selection_all_is_default_and_identity():
+    kernel = _jacobi_kernel()
+    out_default, rep = compile_kernel(kernel, PipelineConfig(), cache=None)
+    assert rep.selection is None
+    assert rep.detection.n_shuffles == 6
+    legacy = synthesize(kernel, _detection(kernel), mode="ptxasw")
+    assert print_kernel(out_default) == print_kernel(legacy)
+
+
+def test_selection_decision_matches_concrete_cycle_model():
+    """The static gate must agree with emulated reality: synthesis wins
+    on Pascal and loses on Volta, per the same cycle model applied to
+    concrete-emulation event counts."""
+    b = get_bench("jacobi")
+    kernel = lower_to_ptx(b.program)
+    det = _detection(kernel)
+    syn = synthesize(kernel, det, mode="ptxasw")
+
+    def run(k):
+        rng = np.random.default_rng(0)
+        ny, nx = 4, 1026               # lane-aligned interior
+        cb = lambda v: int(np.frombuffer(
+            np.float32(v).tobytes(), np.uint32)[0])
+        params = {"w0": rng.standard_normal((ny, nx)).astype(np.float32),
+                  "w1": np.zeros((ny, nx), np.float32),
+                  "n0": nx, "n1": ny,
+                  "c0": cb(.5), "c1": cb(.25), "c2": cb(.125)}
+        return run_concrete(k, params, ntid=(512, 1, 1),
+                            nctaid=(2, ny - 2, 1))
+    base, shuffled = run(kernel), run(syn)
+    assert measured_profit(base, shuffled, "pascal") > 0   # shuffles win
+    assert measured_profit(base, shuffled, "volta") < 0    # shuffles lose
+    # and that is exactly what the per-pair scores predicted
+    assert all(score_pair(p, "pascal").profitable for p in det.pairs)
+    assert not any(score_pair(p, "volta").profitable
+                   for p in det.pairs if p.delta != 0)
+
+
+def test_select_report_scores_every_candidate():
+    det = _detection(_jacobi_kernel())
+    sel = select(det, "maxwell")
+    assert len(sel.scores) == det.n_shuffles == 6
+    assert sel.n_kept == 6 and sel.n_dropped == 0
+    assert sel.selected.n_loads == det.n_loads
+    kepler = select(det, "kepler")
+    assert kepler.n_kept < 6
+    assert all(s.profit <= 0 for s in kepler.dropped)
+
+
+# ---------------------------------------------------------------------------
+# compile_for_targets
+# ---------------------------------------------------------------------------
+
+def _count_emulate(monkeypatch):
+    calls = []
+
+    def counting(kernel, **kw):
+        calls.append(kernel.name)
+        return emulate(kernel, **kw)
+
+    monkeypatch.setattr(analyses_mod, "emulate", counting)
+    return calls
+
+
+def test_compile_for_targets_per_arch_variants(monkeypatch):
+    calls = _count_emulate(monkeypatch)
+    texts = [print_kernel(lower_to_ptx(get_bench(n).program))
+             for n in ("jacobi", "laplacian")]
+    module_text = "\n".join(texts)
+    cache = CompileCache()
+    variants = compile_for_targets(module_text, selection="cost",
+                                   cache=cache, jobs=1)
+    assert len(variants) >= 6
+    # the target-independent prefix ran once per kernel, not per target
+    assert sorted(calls) == ["jacobi", "laplacian"]
+    for name, v in variants.items():
+        prof = v.target
+        assert f".target {prof.sm_name}" in v.ptx
+        assert f".version {prof.ptx_version}" in v.ptx
+        shfl_lines = [l for l in v.ptx.splitlines() if "shfl." in l]
+        if prof.has_shfl_sync:
+            assert all("shfl.sync." in l for l in shfl_lines)
+        else:
+            assert all("sync" not in l for l in shfl_lines)
+        assert [r.name for r in v.reports] == ["jacobi", "laplacian"]
+    # the chosen sets differ across architectures as the model predicts
+    assert variants["pascal"].n_shuffles == 8      # 6 + 2, all kept
+    assert variants["volta"].n_shuffles < variants["pascal"].n_shuffles
+    assert variants["maxwell"].n_shuffles == variants["pascal"].n_shuffles
+
+
+def test_compile_for_targets_subset_and_parallel():
+    text = print_kernel(_jacobi_kernel())
+    variants = compile_for_targets(text, targets=["pascal", "sm_70"],
+                                   cache=None, jobs=2)
+    assert set(variants) == {"pascal", "volta"}
+    assert "shfl.down.b32" in variants["pascal"].ptx
+    assert "shfl.sync.down.b32" in variants["volta"].ptx
+
+
+# ---------------------------------------------------------------------------
+# speedup_table guard rails (satellite)
+# ---------------------------------------------------------------------------
+
+def test_speedup_table_requires_original():
+    with pytest.raises(ValueError, match="original"):
+        speedup_table({"ptxasw": RunStats()})
+
+
+def test_speedup_table_zero_cycles_no_division_error():
+    empty = RunStats()
+    loaded = RunStats(counts={"load_global": 10})
+    table = speedup_table({"original": loaded, "noload": empty},
+                          targets=["volta"])
+    assert table["volta"]["noload"] == float("inf")
+    degenerate = speedup_table({"original": empty, "other": empty},
+                               targets=["volta"])
+    assert degenerate["volta"]["other"] == 1.0
+
+
+def test_estimate_cycles_accepts_profile_and_name():
+    stats = RunStats(counts={"load_global": 6, "shfl": 3, "alu": 10})
+    by_name = estimate_cycles(stats, "pascal")
+    by_prof = estimate_cycles(stats, get_target("pascal"))
+    assert by_name.cycles == by_prof.cycles
+    assert by_name.arch == "pascal"
+
+
+# ---------------------------------------------------------------------------
+# LRU cache (satellite)
+# ---------------------------------------------------------------------------
+
+def test_compile_cache_lru_not_fifo():
+    cache = CompileCache(max_entries=2)
+    kernel = parse_kernel(print_kernel(_jacobi_kernel()))
+    report = KernelReport(name="k")
+    ka = cache.key("a", PipelineConfig(), ("p",))
+    kb = cache.key("b", PipelineConfig(), ("p",))
+    kc = cache.key("c", PipelineConfig(), ("p",))
+    cache.put(ka, kernel, report)
+    cache.put(kb, kernel, report)
+    assert cache.get(ka) is not None     # touch a: now b is the LRU entry
+    cache.put(kc, kernel, report)        # evicts b (FIFO would evict a)
+    assert cache.get(kb) is None
+    assert cache.get(ka) is not None
+    assert cache.stats.evictions == 1
+    assert 0 < cache.stats.hit_rate < 1
+
+
+def test_cache_token_distinguishes_target_and_selection():
+    base = PipelineConfig()
+    assert PipelineConfig(target="pascal").cache_token() \
+        != base.cache_token()
+    assert PipelineConfig(selection="cost").cache_token() \
+        != base.cache_token()
+    # resolution-equivalent specs share entries
+    assert PipelineConfig(target="sm_61").cache_token() \
+        == PipelineConfig(target="pascal").cache_token()
+    # None resolves to the default profile, same as naming it
+    assert base.cache_token() \
+        == PipelineConfig(target=default_target().name).cache_token()
