@@ -1,0 +1,120 @@
+"""E8 — autotuned target-profile calibration (fitted vs Table 1).
+
+Calibrates every built-in Table-1 generation from emulator-backed
+microbenchmark observations (``repro.core.targets.calibrate``), prints
+fitted-vs-shipped deltas per parameter, registers the ``<gen>-tuned``
+profiles (``calibration="fitted"``, resolvable via ``resolve_target``),
+persists the fits as JSON under ``experiments/calibration/``, and
+verifies that ``selection="cost"`` under the tuned profiles reproduces
+the paper's Figure-2 keep/drop split on the benchmark kernels
+(Maxwell/Pascal keep, Kepler/Volta drop).
+
+Usage:  PYTHONPATH=src python -m benchmarks.calibrate
+            [--only kepler,volta] [--out DIR | --no-save]
+            [--max-rel-err 0.10]
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Optional, Sequence
+
+from .common import emit
+
+#: the generations the paper measured (Table 1)
+TABLE1_GENERATIONS = ("kepler", "maxwell", "pascal", "volta")
+
+#: acceptance bound: per-parameter relative error vs the shipped card
+DEFAULT_MAX_REL_ERR = 0.10
+
+
+def _check_fig2_split(tuned_profiles) -> bool:
+    """Cost selection under the tuned profiles must reproduce Figure 2
+    as a decision on the benchmark kernels: Maxwell/Pascal keep every
+    jacobi candidate, Kepler/Volta drop the nonzero-delta ones."""
+    from repro.core.emulator.machine import emulate
+    from repro.core.frontend.kernelgen import get_bench
+    from repro.core.frontend.stencil import lower_to_ptx
+    from repro.core.synthesis.detect import detect
+    from repro.core.targets.cost import select
+
+    kernel = lower_to_ptx(get_bench("jacobi").program)
+    detection = detect(kernel, emulate(kernel))
+    ok = True
+    for base, tuned in tuned_profiles.items():
+        sel = select(detection, tuned)
+        emit(f"calibrate.{tuned.name}.jacobi_kept", sel.n_kept, "pairs",
+             f"of {len(sel.scores)}")
+        if base in ("maxwell", "pascal"):
+            ok &= sel.n_dropped == 0
+        elif base in ("kepler", "volta"):
+            ok &= all(not s.profitable for s in sel.scores
+                      if s.pair.delta != 0)
+    return ok
+
+
+def run(only: Optional[Sequence[str]] = None, save: bool = True,
+        out_dir: Optional[str] = None,
+        max_rel_err: float = DEFAULT_MAX_REL_ERR,
+        register: bool = True) -> bool:
+    from repro.core.targets import resolve_target
+    from repro.core.targets.calibrate import (
+        DEFAULT_CALIBRATION_DIR,
+        FITTED_PARAMS,
+        calibrate,
+        save_calibration,
+    )
+
+    generations = tuple(only) if only else TABLE1_GENERATIONS
+    ok = True
+    tuned_profiles = {}
+    for gen in generations:
+        base = resolve_target(gen)
+        fit = calibrate(base, register=register)
+        tuned_profiles[base.name] = fit.profile
+        errs = fit.rel_errors(base)
+        fitted = fit.fitted_params()
+        for param in FITTED_PARAMS:
+            emit(f"calibrate.{gen}.{param}", fitted[param], "",
+                 f"rel_err {errs[param]:.2e}")
+        emit(f"calibrate.{gen}.quality", fit.quality, "R^2",
+             f"{fit.n_observations} obs via {fit.backend}")
+        emit(f"calibrate.{gen}.max_rel_err", fit.max_rel_error(base), "")
+        ok &= fit.max_rel_error(base) <= max_rel_err
+        if register:
+            # registration is live: the tuned profile resolves by name
+            ok &= resolve_target(fit.profile.name).calibration == "fitted"
+        if save:
+            path = save_calibration(
+                fit, out_dir if out_dir else DEFAULT_CALIBRATION_DIR)
+            emit(f"calibrate.{gen}.saved", str(path), "path")
+    ok &= _check_fig2_split(tuned_profiles)
+    emit("calibrate.STRUCTURE_OK", int(ok), "bool",
+         f"fitted within {max_rel_err:.0%} of Table 1; "
+         "tuned cost gate keeps Maxwell/Pascal, drops Kepler/Volta")
+    return ok
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="calibrate target profiles from microbenchmarks")
+    ap.add_argument("--only", default=None,
+                    help="comma list of generations "
+                         f"(default: {','.join(TABLE1_GENERATIONS)})")
+    ap.add_argument("--out", default=None,
+                    help="directory for calibration JSON "
+                         "(default: experiments/calibration)")
+    ap.add_argument("--no-save", action="store_true",
+                    help="skip writing calibration JSON")
+    ap.add_argument("--max-rel-err", type=float, default=DEFAULT_MAX_REL_ERR,
+                    help="per-parameter acceptance bound vs Table 1")
+    args = ap.parse_args()
+    print("name,value,unit,derived")
+    ok = run(only=args.only.split(",") if args.only else None,
+             save=not args.no_save, out_dir=args.out,
+             max_rel_err=args.max_rel_err)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

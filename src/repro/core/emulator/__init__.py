@@ -1,2 +1,8 @@
 from .machine import SymbolicEmulator, emulate  # noqa: F401
+from .observe import (  # noqa: F401
+    LATENCY_FEATURES,
+    MODEL_FEATURES,
+    Observation,
+    extract_features,
+)
 from .trace import FlowResult, LoadEvent, StoreEvent  # noqa: F401

@@ -27,6 +27,7 @@ from typing import Dict, Optional, Sequence, Union
 
 from ..targets import TargetProfile, all_targets, resolve_target
 from .concrete import RunStats
+from .observe import extract_features
 
 
 @dataclasses.dataclass
@@ -34,6 +35,32 @@ class CycleReport:
     arch: str
     cycles: float
     breakdown: Dict[str, float]
+
+
+def cycles_from_features(features: Dict[str, float],
+                         arch: Union[str, TargetProfile],
+                         hidden: bool = True) -> float:
+    """The model's closed form over an extracted feature vector.
+
+    This is the single expression both :func:`estimate_cycles` and the
+    calibration fitter (:mod:`repro.core.targets.calibrate`) evaluate:
+    latency-weighted memory/shuffle events divided by the profile's
+    hiding factors, plus issue-cost terms.  ``hidden=False`` scores a
+    serialized dependent chain (a latency-probe microbenchmark), where
+    every event waits for its predecessor and nothing is hidden.
+    """
+    p = resolve_target(arch)
+    lat = p.latency
+    load_div = p.mlp if hidden else 1.0
+    shfl_div = p.shfl_hide if hidden else 1.0
+    g = features.get
+    return (g("l1", 0.0) * lat["l1"] / load_div
+            + g("sm", 0.0) * lat["sm"] / load_div
+            + g("shfl", 0.0) * lat["shfl"] / shfl_div
+            + g("alu", 0.0) * p.alu_cost
+            + g("falu", 0.0) * p.falu_cost
+            + g("branch", 0.0) * p.branch_cost
+            + g("pred_off", 0.0) * p.pred_off_cost)
 
 
 def estimate_cycles(stats: RunStats,
@@ -53,7 +80,11 @@ def estimate_cycles(stats: RunStats,
     br["falu"] = counts.get("falu", 0) * p.falu_cost
     br["branch"] = counts.get("branch", 0) * p.branch_cost
     br["pred_off"] = counts.get("pred_off", 0) * p.pred_off_cost
-    return CycleReport(arch=p.name, cycles=sum(br.values()), breakdown=br)
+    # the total is the shared closed form over the extracted features
+    # (the breakdown above only splits the l1 term into loads/stores)
+    return CycleReport(arch=p.name,
+                       cycles=cycles_from_features(extract_features(stats), p),
+                       breakdown=br)
 
 
 def speedup_table(stats_by_version: Dict[str, RunStats],

@@ -43,6 +43,14 @@ class CacheStats:
         return (f"hits {self.hits} misses {self.misses} "
                 f"hit-rate {self.hit_rate:.1%} evictions {self.evictions}")
 
+    def reset(self) -> None:
+        """Zero the counters *in place* — callers holding a reference
+        (hit-rate reporting across a clear) observe the reset instead of
+        silently reading a dead object."""
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
 
 class CompileCache:
     """Thread-safe LRU-bounded map: content hash -> (kernel, report)."""
@@ -88,7 +96,9 @@ class CompileCache:
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
-            self.stats = CacheStats()
+            # reset, never reassign: self.stats identity is part of the
+            # API (benchmarks keep a reference for hit-rate reporting)
+            self.stats.reset()
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -10,8 +10,11 @@ Public API::
 Profiles (latency tables, hiding factors, warp geometry, ISA
 capabilities) are data; the cycle model, the ``select-shuffles`` pass,
 codegen, and the printer are the engines that consume them.  Cost
-scoring lives in :mod:`repro.core.targets.cost` (imported lazily by the
-passes to keep the package import-light).
+scoring lives in :mod:`repro.core.targets.cost` and the autotuned
+calibration harness (microbenchmark suite + measurement backends +
+least-squares/coordinate-descent fitter that registers
+``"<gen>-tuned"`` profiles) in :mod:`repro.core.targets.calibrate`;
+both are imported lazily to keep the package import-light.
 """
 
 from .profile import TargetProfile  # noqa: F401
@@ -28,4 +31,5 @@ from .registry import (  # noqa: F401
     register_target,
     resolve_target,
     target_names,
+    unregister_target,
 )

@@ -13,12 +13,17 @@ The per-pair closed form weights the event-count delta the rewrite
 induces in the concrete warp emulator
 (:mod:`repro.core.emulator.concrete`), with the same latency terms
 :func:`repro.core.emulator.cycles.estimate_cycles` applies to those
-counts; the capture ``mov`` a source shared by k pairs costs is split
-k ways, so per-pair profits sum to the whole-kernel cycle delta up to
-the constant 2-instruction prologue (which cannot reorder candidates).
-``measured_profit`` closes the loop: it diffs full concrete-emulation
-stats through the cycle model, which the tests use to check the static
-selection against emulated reality.
+counts; the capture ``mov`` a source shared by k *kept* pairs costs is
+split k ways, so per-pair profits sum to the whole-kernel cycle delta
+up to the constant 2-instruction prologue (which cannot reorder
+candidates).  Because codegen emits the capture once per distinct
+source *of the synthesized set*, ``select`` iterates scoring to a fixed
+point: dropping a pair shrinks its sharers' split, raising the
+survivors' capture share to what codegen will actually charge them —
+a pair profitable only under the stale all-candidates split is
+re-scored and rejected.  ``measured_profit`` closes the loop: it diffs
+full concrete-emulation stats through the cycle model, which the tests
+use to check the static selection against emulated reality.
 """
 
 from __future__ import annotations
@@ -116,21 +121,39 @@ def score_pair(pair, profile: Union[TargetProfile, str],
 
 def select(detection, target: Union[TargetProfile, str, None] = None,
            mode: str = "ptxasw") -> SelectionReport:
-    """Drop the candidates the target's cycle model predicts to lose."""
+    """Drop the candidates the target's cycle model predicts to lose.
+
+    Scoring iterates to a fixed point over the *kept* set: the capture
+    ``mov`` is split across the pairs codegen will actually synthesize,
+    so each drop re-scores the dropped pair's surviving sharers with
+    their larger capture share.  Convergence is guaranteed — a shrinking
+    share only raises a pair's cost, so drops are monotone and the loop
+    runs at most once per candidate.  A dropped pair keeps the
+    (unprofitable) score it was rejected with; survivors carry the
+    final-iteration scores, whose profits sum to what codegen emits.
+    """
     from ..synthesis.detect import DetectionResult
 
+    pairs = list(detection.pairs)
     profile = resolve_target(target)
-    sharers = Counter(p.src_uid for p in detection.pairs)
-    scores = [score_pair(p, profile, mode=mode,
-                         src_share=sharers[p.src_uid])
-              for p in detection.pairs]
-    kept = [s.pair for s in scores if s.profitable]
-    selected = DetectionResult(pairs=kept,
+    kept = set(range(len(pairs)))
+    scores: dict = {}
+    while True:
+        sharers = Counter(pairs[i].src_uid for i in kept)
+        for i in kept:
+            scores[i] = score_pair(pairs[i], profile, mode=mode,
+                                   src_share=sharers[pairs[i].src_uid])
+        dropped = {i for i in kept if not scores[i].profitable}
+        if not dropped:
+            break
+        kept -= dropped
+    selected = DetectionResult(pairs=[pairs[i] for i in sorted(kept)],
                                n_loads=detection.n_loads,
                                n_flows=detection.n_flows,
                                analysis_time_s=detection.analysis_time_s)
     return SelectionReport(target=profile.name, mode=mode,
-                           scores=scores, selected=selected)
+                           scores=[scores[i] for i in range(len(pairs))],
+                           selected=selected)
 
 
 def measured_profit(base_stats, variant_stats,

@@ -13,8 +13,8 @@ architecture is a data change, not a code change.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict
+from dataclasses import asdict, dataclass
+from typing import Any, Dict, Mapping
 
 
 @dataclass(frozen=True)
@@ -69,3 +69,25 @@ class TargetProfile:
         """The paper's headline profitability ratio: >1 means a shuffle
         is cheaper than the cache hit it replaces."""
         return self.latency["l1"] / self.latency["shfl"]
+
+    # ------------------------------------------------------------------
+    # persistence (calibration JSON round-trip)
+    # ------------------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        """Plain-JSON-serializable view of the profile (all fields)."""
+        return asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Mapping[str, Any]) -> "TargetProfile":
+        """Rebuild a profile from :meth:`to_dict` output.  Unknown keys
+        are rejected loudly — a schema drift should fail a load, not
+        silently drop a field."""
+        fields = {f for f in cls.__dataclass_fields__}  # noqa: C401
+        extra = set(data) - fields
+        if extra:
+            raise ValueError(f"unknown TargetProfile fields: {sorted(extra)}")
+        kwargs = dict(data)
+        if "latency" not in kwargs:
+            raise ValueError("TargetProfile data is missing 'latency'")
+        kwargs["latency"] = dict(kwargs["latency"])
+        return cls(**kwargs)

@@ -11,21 +11,64 @@ accepts a profile, a registry name (``"pascal"``), an ``sm_XX`` string
 from __future__ import annotations
 
 import re
+import threading
 from typing import Dict, Optional, Tuple, Union
 
 from .profile import TargetProfile
 
 _REGISTRY: Dict[str, TargetProfile] = {}
 
+# Registration is no longer an import-time-only event: the calibration
+# harness (targets.calibrate) registers fitted profiles at runtime,
+# possibly while parallel run_module compiles are resolving targets on
+# worker threads.  Every read/write of _REGISTRY holds this lock.
+_LOCK = threading.RLock()
+
 _SM_RE = re.compile(r"sm_(\d+)")
 
 
-def register_target(profile: TargetProfile) -> TargetProfile:
-    """Register a profile under its name (and make it sm-resolvable)."""
-    if profile.name in _REGISTRY:
-        raise ValueError(f"target {profile.name!r} already registered")
-    _REGISTRY[profile.name] = profile
+def register_target(profile: TargetProfile,
+                    overwrite: bool = False) -> TargetProfile:
+    """Register a profile under its name (and make it sm-resolvable).
+
+    Re-registering an existing name raises unless ``overwrite=True``,
+    and even then only profiles whose registered entry carries
+    ``calibration="fitted"`` may be replaced — re-running a calibration
+    is idempotent, but the built-in Table-1 data cards cannot be
+    clobbered by accident.
+    """
+    with _LOCK:
+        existing = _REGISTRY.get(profile.name)
+        if existing is not None:
+            if not overwrite:
+                raise ValueError(
+                    f"target {profile.name!r} already registered "
+                    "(pass overwrite=True to replace a fitted profile)")
+            if existing.calibration != "fitted":
+                raise ValueError(
+                    f"target {profile.name!r} is a built-in "
+                    f"{existing.calibration!r} profile; only "
+                    "calibration='fitted' entries may be overwritten")
+        _REGISTRY[profile.name] = profile
     return profile
+
+
+def unregister_target(name: str) -> TargetProfile:
+    """Remove a runtime-registered fitted profile (tests,
+    re-calibration).  Built-in data cards cannot be removed — the same
+    protection ``register_target``'s overwrite guard gives them."""
+    with _LOCK:
+        if name == _DEFAULT_NAME:
+            raise ValueError(f"cannot unregister the default target {name!r}")
+        try:
+            existing = _REGISTRY[name]
+        except KeyError:
+            raise KeyError(f"unknown target profile {name!r}") from None
+        if existing.calibration != "fitted":
+            raise ValueError(
+                f"target {name!r} is a built-in {existing.calibration!r} "
+                "profile; only calibration='fitted' entries can be removed")
+        return _REGISTRY.pop(name)
 
 
 def target_names() -> Tuple[str, ...]:
@@ -34,22 +77,28 @@ def target_names() -> Tuple[str, ...]:
 
 
 def all_targets() -> Tuple[TargetProfile, ...]:
-    return tuple(sorted(_REGISTRY.values(), key=lambda p: p.sm))
+    with _LOCK:
+        profiles = list(_REGISTRY.values())
+    # deterministic order even when a fitted profile shares its base
+    # profile's compute capability
+    return tuple(sorted(profiles, key=lambda p: (p.sm, p.name)))
 
 
 def default_target() -> TargetProfile:
     """The process default (what the printer's fallback directives and
     unconfigured pipelines use)."""
-    return _REGISTRY[_DEFAULT_NAME]
+    with _LOCK:
+        return _REGISTRY[_DEFAULT_NAME]
 
 
 def get_target(name: str) -> TargetProfile:
     """Strict lookup by registered profile name (no sm resolution)."""
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown target profile {name!r}; registered: "
-                       f"{sorted(_REGISTRY)}") from None
+    with _LOCK:
+        try:
+            return _REGISTRY[name]
+        except KeyError:
+            raise KeyError(f"unknown target profile {name!r}; registered: "
+                           f"{sorted(_REGISTRY)}") from None
 
 
 def resolve_target(spec: Union[TargetProfile, str, None] = None
@@ -60,8 +109,9 @@ def resolve_target(spec: Union[TargetProfile, str, None] = None
     if isinstance(spec, TargetProfile):
         return spec
     s = spec.split(",")[0].strip().lower()
-    if s in _REGISTRY:
-        return _REGISTRY[s]
+    with _LOCK:
+        if s in _REGISTRY:
+            return _REGISTRY[s]
     m = _SM_RE.match(s)
     if m:
         n = int(m.group(1))
@@ -71,13 +121,18 @@ def resolve_target(spec: Union[TargetProfile, str, None] = None
             # run it
             raise KeyError(f"target {spec!r} predates the warp-shuffle "
                            "ISA (sm_30); no profile can model it")
-        profiles = all_targets()
+        # fitted profiles share their base generation's sm; resolving a
+        # hardware string must keep electing the hardware data card —
+        # tuned profiles are opted into by name
+        profiles = [p for p in all_targets() if p.calibration != "fitted"]
         at_or_below = [p for p in profiles if p.sm <= n]
         # sm_30..34 fall forward to the lowest profile (Kepler): same
         # ISA generation, only the latency calibration is borrowed
         return at_or_below[-1] if at_or_below else profiles[0]
+    with _LOCK:
+        known = sorted(_REGISTRY)
     raise KeyError(f"unknown target {spec!r}; registered: "
-                   f"{sorted(_REGISTRY)} (or any sm_XX >= 30)")
+                   f"{known} (or any sm_XX >= 30)")
 
 
 # ---------------------------------------------------------------------------

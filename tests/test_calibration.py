@@ -1,0 +1,300 @@
+"""Calibration-harness tests: microbenchmark suite composition, the
+emulator measurement backend's latency-vs-throughput scoring, profile
+recovery (exact and noisy), runtime registration of tuned profiles
+(thread-safe, idempotent), persistence round-trips, and the tuned
+profiles driving ``selection="cost"`` to the paper's Figure-2 split."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.emulator.concrete import RunStats, run_concrete
+from repro.core.emulator.cycles import cycles_from_features, estimate_cycles
+from repro.core.emulator.machine import emulate
+from repro.core.emulator.observe import Observation, extract_features
+from repro.core.frontend.kernelgen import get_bench
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.synthesis.detect import detect
+from repro.core.targets import (
+    TargetProfile,
+    get_target,
+    register_target,
+    resolve_target,
+    unregister_target,
+)
+from repro.core.targets.calibrate import (
+    EmulatorBackend,
+    FITTED_PARAMS,
+    calibrate,
+    default_suite,
+    fit_profile,
+    load_calibration,
+    save_calibration,
+)
+from repro.core.targets.cost import select
+
+TABLE1 = ("kepler", "maxwell", "pascal", "volta")
+
+
+def _jacobi_detection():
+    kernel = lower_to_ptx(get_bench("jacobi").program)
+    return detect(kernel, emulate(kernel))
+
+
+# ---------------------------------------------------------------------------
+# observation model
+# ---------------------------------------------------------------------------
+
+def test_extract_features_groups_events_like_the_cycle_model():
+    stats = RunStats(counts={"load_global": 7, "store_global": 2,
+                             "store_shared": 1, "load_shared": 5,
+                             "shfl": 3, "alu": 11, "falu": 4,
+                             "branch": 2, "pred_off": 6})
+    f = extract_features(stats)
+    assert f["l1"] == 10 and f["sm"] == 5 and f["shfl"] == 3
+    for prof in ("kepler", "volta"):
+        assert estimate_cycles(stats, prof).cycles == pytest.approx(
+            cycles_from_features(f, prof))
+
+
+def test_default_suite_has_probes_and_mixes_with_expected_events():
+    suite = default_suite("pascal")
+    kinds = {b.kind for b in suite}
+    assert kinds == {"latency", "throughput"}
+    backend = EmulatorBackend("pascal")
+    by_name = {b.name: backend.measure(b) for b in suite}
+    # each latency probe is dominated by its feature
+    assert by_name["lat_l1_chase_48"].feature("l1") > 32 * 48
+    assert by_name["lat_sm_chase_48"].feature("sm") == 32 * 48
+    assert by_name["lat_shfl_chain_48"].feature("shfl") == 32 * 48
+    # throughput mixes: stencils are load-bound, streams shuffle-bound,
+    # and the synthesized jacobi carries the full PTXASW event mix
+    assert by_name["thr_gaussblur"].feature("l1") > 0
+    assert by_name["thr_gaussblur"].feature("shfl") == 0
+    assert by_name["thr_shfl_stream_24"].feature("shfl") > 0
+    assert by_name["thr_sm_stream_16"].feature("sm") > 0
+    mixed = by_name["thr_jacobi_ptxasw"]
+    assert mixed.feature("shfl") > 0 and mixed.feature("l1") > 0
+    assert mixed.feature("pred_off") > 0
+
+
+def test_emulator_backend_scores_probes_serialized():
+    """A latency probe contributes unhidden latencies (divisor 1); the
+    same kernel scored as throughput would divide by the hiding."""
+    suite = {b.name: b for b in default_suite("maxwell")}
+    bench = suite["lat_l1_chase_16"]
+    obs = EmulatorBackend("maxwell").measure(bench)
+    assert obs.kind == "latency"
+    assert obs.cycles == pytest.approx(
+        cycles_from_features(obs.features, "maxwell", hidden=False))
+    assert obs.cycles > cycles_from_features(obs.features, "maxwell")
+
+
+# ---------------------------------------------------------------------------
+# fitting: recovery properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen", TABLE1)
+def test_fit_recovers_builtin_profile_from_emulated_observations(gen):
+    fit = calibrate(gen, register=False)
+    errs = fit.rel_errors(gen)
+    assert set(errs) == set(FITTED_PARAMS)
+    assert fit.max_rel_error(gen) <= 0.01, errs     # acceptance bound: 10%
+    assert fit.quality > 0.999
+    assert fit.profile.calibration == "fitted"
+    assert fit.profile.name == f"{gen}-tuned"
+    # non-fitted fields ride along from the base card
+    base = get_target(gen)
+    assert fit.profile.has_shfl_sync == base.has_shfl_sync
+    assert fit.profile.sm == base.sm
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fit_recovers_profile_from_synthetic_observations(seed):
+    """Property-style: observations generated *from* a profile's closed
+    form (random feature mixes) are fitted back to that profile."""
+    base = get_target("maxwell")
+    rng = np.random.default_rng(seed)
+    obs = []
+    for i in range(12):
+        kind = "latency" if i % 2 == 0 else "throughput"
+        feats = {"l1": float(rng.integers(0, 200)),
+                 "sm": float(rng.integers(0, 200)),
+                 "shfl": float(rng.integers(0, 200)),
+                 "alu": float(rng.integers(0, 400)),
+                 "falu": float(rng.integers(0, 100))}
+        obs.append(Observation(
+            name=f"syn{i}", kind=kind, features=feats,
+            cycles=cycles_from_features(feats, base,
+                                        hidden=kind == "throughput")))
+    fit = fit_profile(obs, base, name="maxwell-syn")
+    assert fit.max_rel_error(base) <= 1e-6
+    assert fit.quality == pytest.approx(1.0)
+
+
+def test_fit_tolerates_measurement_noise():
+    backend = EmulatorBackend("pascal", noise=0.03, seed=7)
+    fit = calibrate("pascal", backend=backend, register=False)
+    assert fit.max_rel_error("pascal") <= 0.10
+    assert fit.quality > 0.97
+
+
+def test_fit_profile_rejects_empty_observations():
+    with pytest.raises(ValueError, match="observation"):
+        fit_profile([], "volta")
+
+
+# ---------------------------------------------------------------------------
+# registry integration (runtime registration satellites)
+# ---------------------------------------------------------------------------
+
+def test_calibrate_registers_resolvable_tuned_profile_idempotently():
+    try:
+        fit = calibrate("volta")
+        assert resolve_target("volta-tuned") is fit.profile
+        # re-calibration re-registers without raising
+        fit2 = calibrate("volta")
+        assert resolve_target("volta-tuned") is fit2.profile
+        # hardware sm strings keep electing the hardware card, not the
+        # fitted profile that shares its compute capability
+        assert resolve_target("sm_70").name == "volta"
+        assert resolve_target("sm_75").name == "volta"
+    finally:
+        unregister_target("volta-tuned")
+    with pytest.raises(KeyError):
+        resolve_target("volta-tuned")
+
+
+def test_register_target_overwrite_guards():
+    prof = TargetProfile(name="volta", sm=70, arch="x",
+                         latency=dict(shfl=1, sm=1, l1=1), mlp=1.0,
+                         has_shfl_sync=True)
+    with pytest.raises(ValueError, match="already registered"):
+        register_target(prof)
+    # even overwrite=True cannot clobber a built-in data card
+    with pytest.raises(ValueError, match="built-in"):
+        register_target(prof, overwrite=True)
+    with pytest.raises(ValueError, match="default"):
+        unregister_target("volta")
+    # nor can a built-in card be removed
+    with pytest.raises(ValueError, match="built-in"):
+        unregister_target("pascal")
+    assert resolve_target("sm_61").name == "pascal"
+
+
+def test_registry_is_thread_safe_under_runtime_registration():
+    from repro.core.targets import all_targets, target_names
+
+    errors = []
+
+    def churn(i):
+        try:
+            prof = get_target("pascal")
+            import dataclasses
+            tuned = dataclasses.replace(prof, name="pascal-race",
+                                        calibration="fitted")
+            for _ in range(50):
+                register_target(tuned, overwrite=True)
+                assert resolve_target("pascal-race").calibration == "fitted"
+                all_targets()
+                target_names()
+                resolve_target("sm_61")
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=churn, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    unregister_target("pascal-race")
+    assert not errors
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_golden_roundtrip_fit_save_load(tmp_path):
+    fit = calibrate("maxwell", register=False)
+    path = save_calibration(fit, tmp_path)
+    assert path.name == "maxwell-tuned.json"
+    payload = json.loads(path.read_text())
+    assert payload["schema"] == 1
+    assert payload["fit"]["base"] == "maxwell"
+
+    loaded = load_calibration(path)
+    assert loaded.profile == fit.profile          # identical profile
+    assert loaded.quality == fit.quality
+    assert loaded.residuals == fit.residuals
+
+    # identical profiles -> identical cost-selection decisions
+    det = _jacobi_detection()
+    a, b = select(det, fit.profile), select(det, loaded.profile)
+    assert [s.profitable for s in a.scores] == \
+        [s.profitable for s in b.scores]
+    assert [p.dst_uid for p in a.selected.pairs] == \
+        [p.dst_uid for p in b.selected.pairs]
+
+
+def test_load_calibration_rejects_schema_drift(tmp_path):
+    fit = calibrate("kepler", register=False)
+    path = save_calibration(fit, tmp_path)
+    payload = json.loads(path.read_text())
+    payload["schema"] = 99
+    path.write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="schema"):
+        load_calibration(path)
+    payload["schema"] = 1
+    payload["profile"]["not_a_field"] = 1
+    path.write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="not_a_field"):
+        load_calibration(path)
+    del payload["profile"]["not_a_field"]
+    del payload["profile"]["latency"]
+    path.write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="latency"):
+        load_calibration(path)
+
+
+def test_load_calibration_can_register(tmp_path):
+    fit = calibrate("kepler", register=False)
+    path = save_calibration(fit, tmp_path)
+    try:
+        loaded = load_calibration(path, register=True)
+        assert resolve_target("kepler-tuned") is loaded.profile
+    finally:
+        unregister_target("kepler-tuned")
+
+
+# ---------------------------------------------------------------------------
+# end to end: tuned profiles drive the cost gate to the Figure-2 split
+# ---------------------------------------------------------------------------
+
+def test_tuned_profiles_reproduce_fig2_keep_drop_split():
+    det = _jacobi_detection()
+    fits = {gen: calibrate(gen, register=False) for gen in TABLE1}
+    for gen in ("maxwell", "pascal"):
+        assert select(det, fits[gen].profile).n_dropped == 0
+    for gen in ("kepler", "volta"):
+        sel = select(det, fits[gen].profile)
+        assert all(not s.profitable for s in sel.scores
+                   if s.pair.delta != 0)
+
+
+def test_tuned_profile_flows_through_compile_pipeline():
+    from repro.core.passes import PipelineConfig, compile_kernel
+    from repro.core.ptx import print_kernel
+
+    kernel = lower_to_ptx(get_bench("jacobi").program)
+    try:
+        fit = calibrate("volta")
+        out, rep = compile_kernel(
+            kernel, PipelineConfig(target="volta-tuned", selection="cost"),
+            cache=None)
+        assert rep.selection.target == "volta-tuned"
+        assert "shfl" not in print_kernel(out)    # Volta drops (Fig. 2)
+    finally:
+        unregister_target("volta-tuned")

@@ -346,6 +346,105 @@ def test_compile_cache_lru_not_fifo():
     assert 0 < cache.stats.hit_rate < 1
 
 
+# ---------------------------------------------------------------------------
+# src_share fixed point (headline satellite)
+# ---------------------------------------------------------------------------
+
+# Engineered so the share cascade flips decisions: at the stale
+# all-candidates split (3 sharers) deltas 1 and 2 look profitable and 3
+# does not; re-scoring the survivors with the post-drop split rejects
+# delta 2 as well, and delta 1 alone stays profitable at share 1.
+_SHARE_FIXTURE = TargetProfile(
+    name="fxshare", sm=61, arch="share fixture",
+    latency=dict(shfl=128, sm=20, l1=160), mlp=1.0,
+    has_shfl_sync=False, shfl_ilp=1.0,
+    alu_cost=5.0, pred_off_cost=0.0)
+
+
+def _four_tap_kernel():
+    """out[i] = w[i] + w[i+1] + w[i+2] + w[i+3]: one source load shared
+    by three covered loads (deltas 1, 2, 3)."""
+    from repro.core.frontend.stencil import Array, I, Program
+
+    w = Array("w0")
+    expr = w[I()] + w[I(1)] + w[I(2)] + w[I(3)]
+    return lower_to_ptx(Program(name="sharer4", ndim=1,
+                                out=Array("out")[I()], expr=expr))
+
+
+def test_select_recomputes_src_share_over_kept_set():
+    from repro.core.synthesis.detect import DetectionResult, ShufflePair
+
+    pairs = [ShufflePair(dst_uid=10 + n, src_uid=1, delta=n)
+             for n in (1, 2, 3)]
+    det = DetectionResult(pairs=pairs, n_loads=4)
+    # the stale all-candidates split keeps delta 2...
+    assert score_pair(pairs[1], _SHARE_FIXTURE, src_share=3).profitable
+    # ...but the fixed point rejects it: after delta 3 drops, delta 2
+    # re-scores at share 2 and loses
+    sel = select(det, _SHARE_FIXTURE)
+    assert [p.delta for p in sel.selected.pairs] == [1]
+    by_delta = {s.pair.delta: s for s in sel.scores}
+    assert by_delta[1].profitable
+    assert not by_delta[2].profitable and not by_delta[3].profitable
+    # the survivor carries the final share-1 score (capture not split)
+    assert by_delta[1].shuffled_cycles == pytest.approx(
+        score_pair(pairs[0], _SHARE_FIXTURE, src_share=1).shuffled_cycles)
+
+
+def test_fixed_point_profit_sums_match_measured_profit():
+    """Whole-kernel predicted profit of the *kept* set must equal the
+    concrete-emulation cycle delta up to the 2-instruction prologue."""
+    kernel = _four_tap_kernel()
+    det = _detection(kernel)
+    assert sorted(abs(p.delta) for p in det.pairs) == [1, 2, 3]
+    assert len({p.src_uid for p in det.pairs}) == 1
+    sel = select(det, _SHARE_FIXTURE)
+    assert [p.delta for p in sel.selected.pairs] == [1]
+
+    variant = synthesize(kernel, sel.selected, mode="ptxasw",
+                         target=_SHARE_FIXTURE)
+    rng = np.random.default_rng(0)
+    n0 = 38                       # interior = 32: one full, all-interior warp
+    threads = 32
+
+    def run(k):
+        params = {"w0": rng.standard_normal(n0).astype(np.float32),
+                  "out": np.zeros(n0, np.float32), "n0": n0}
+        return run_concrete(k, params, ntid=(threads, 1, 1),
+                            nctaid=(1, 1, 1))
+    measured = measured_profit(run(kernel), run(variant), _SHARE_FIXTURE)
+    predicted = sum(s.profit for s in sel.scores if s.profitable)
+    prologue = 2 * _SHARE_FIXTURE.alu_cost * threads
+    assert measured == pytest.approx(threads * predicted - prologue)
+    assert abs(measured - threads * predicted) <= prologue + 1e-9
+    # the stale model's books would not balance: it promises delta-2
+    # profit codegen never delivers
+    stale = sum(score_pair(p, _SHARE_FIXTURE, src_share=3).profit
+                for p in det.pairs if p.delta in (1, 2))
+    assert abs(measured - (threads * stale - prologue)) > 1.0
+
+
+# ---------------------------------------------------------------------------
+# CompileCache.clear keeps the stats object alive (satellite)
+# ---------------------------------------------------------------------------
+
+def test_cache_clear_resets_stats_in_place():
+    cache = CompileCache(max_entries=2)
+    kernel = parse_kernel(print_kernel(_jacobi_kernel()))
+    held = cache.stats                  # benchmarks/run.py-style reference
+    key = cache.key("a", PipelineConfig(), ("p",))
+    cache.put(key, kernel, KernelReport(name="k"))
+    assert cache.get(key) is not None and cache.get("absent") is None
+    assert held.hits == 1 and held.misses == 1
+    cache.clear()
+    assert cache.stats is held          # same object, counters zeroed
+    assert (held.hits, held.misses, held.evictions) == (0, 0, 0)
+    assert len(cache) == 0
+    cache.get(key)
+    assert held.misses == 1             # and it keeps counting
+
+
 def test_cache_token_distinguishes_target_and_selection():
     base = PipelineConfig()
     assert PipelineConfig(target="pascal").cache_token() \
