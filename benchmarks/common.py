@@ -8,6 +8,24 @@ from typing import Callable, Dict, Optional
 
 import numpy as np
 
+_SESSION = None
+
+
+def session(jobs: Optional[int] = None):
+    """The harness's one compile session (`repro.core.driver.Compiler`).
+
+    Every suite compiles through the same session-scoped cache, so the
+    harness's cache hit-rate and aggregated pass timings are *its own*
+    (``benchmarks.run`` prints them from the session at exit) instead
+    of whatever the process-wide ``GLOBAL_CACHE`` accumulated.  The
+    first caller (``benchmarks.run --jobs N``) sets the worker count.
+    """
+    global _SESSION
+    if _SESSION is None:
+        from repro.core.driver import Compiler
+        _SESSION = Compiler(jobs=jobs)
+    return _SESSION
+
 
 def timed(fn: Callable, *args, repeat: int = 3, **kw):
     best = float("inf")

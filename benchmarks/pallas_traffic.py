@@ -15,11 +15,10 @@ import numpy as np
 
 from repro.core.frontend.kernelgen import get_bench
 from repro.core.frontend.pallas_lower import synthesize_tpu
-from repro.core.passes import GLOBAL_CACHE
 from repro.kernels.stencil import reference, stencil_apply, traffic_report
 from repro.kernels.conv1d import hbm_bytes as conv_bytes
 
-from .common import emit, timed
+from .common import emit, session, timed
 
 BENCHES = ("jacobi", "gaussblur", "tricubic", "lapgsrb", "wave13pt")
 FULL_SHAPES = {2: (32768, 32768), 3: (512, 1024, 1024)}   # paper's sizes
@@ -32,14 +31,15 @@ def run() -> bool:
         b = get_bench(name)
         prog = b.program
         nd = prog.ndim
-        # detection via the cached analysis pipeline; a repeated plan
-        # request for the same program — the serving path — must be
-        # cache-served with zero re-emulation
-        plan = synthesize_tpu(prog, max_delta=b.max_delta)
-        hits_before = GLOBAL_CACHE.stats.hits
-        plan2 = synthesize_tpu(prog, max_delta=b.max_delta)
+        # detection via the harness session's cached analysis pipeline;
+        # a repeated plan request for the same program — the serving
+        # path — must be cache-served with zero re-emulation
+        cc = session()
+        plan = synthesize_tpu(prog, max_delta=b.max_delta, compiler=cc)
+        hits_before = cc.cache_stats.hits
+        plan2 = synthesize_tpu(prog, max_delta=b.max_delta, compiler=cc)
         ok &= plan.consistent and plan2.consistent
-        ok &= GLOBAL_CACHE.stats.hits == hits_before + 1
+        ok &= cc.cache_stats.hits == hits_before + 1
         emit(f"pallas.{name}.shuffles", plan.n_shuffles, "count",
              "detection drives the VMEM row plan")
         t = traffic_report(prog, FULL_SHAPES[nd])
@@ -72,7 +72,7 @@ def run() -> bool:
     emit("pallas.conv1d.reduction", r, "x",
          "W=4 causal conv: one halo fetch vs 4 tap fetches")
     ok &= r > 3.5
-    stats = GLOBAL_CACHE.stats
+    stats = session().cache_stats
     emit("pallas.compile_cache.hits", stats.hits, "count")
     emit("pallas.compile_cache.misses", stats.misses, "count")
     emit("pallas.compile_cache.hit_rate", stats.hit_rate, "x")

@@ -8,20 +8,20 @@ from __future__ import annotations
 
 from repro.core.frontend.kernelgen import all_benches
 from repro.core.frontend.stencil import lower_to_ptx
-from repro.core.passes import compile_module
 from repro.core.ptx import Module
 
-from .common import emit
+from .common import emit, session
 
 
 def run() -> bool:
     ok_all = True
-    # the whole suite as one 16-kernel module: kernels compile in
-    # parallel (``benchmarks.run --jobs N`` sets the worker count)
+    # the whole suite as one 16-kernel module through the harness's
+    # driver session: kernels compile in parallel (``benchmarks.run
+    # --jobs N`` sets the session's worker count)
     benches = all_benches()
     module = Module(kernels=[lower_to_ptx(b.program)
                              for b in benches.values()])
-    _, reports = compile_module(module)
+    reports = session().compile(module).reports
     for (name, b), rep in zip(benches.items(), reports):
         d = rep.detection
         got = (d.n_shuffles, d.n_loads)

@@ -8,7 +8,7 @@ data cards into fitted profiles:
 2. fit ``latency`` (shfl/sm/l1), ``mlp`` and ``shfl_ilp`` by least
    squares + coordinate descent over the cycle model's closed form;
 3. register the tuned profile — ``selection="cost"`` and
-   ``compile_for_targets`` resolve it by name like any built-in;
+   ``Compiler.variants`` resolve it by name like any built-in;
 4. persist the fit as JSON and load it back (what a deployment with a
    real wall-clock backend would ship).
 
@@ -17,9 +17,8 @@ Run:  PYTHONPATH=src python examples/calibrate_target.py
 
 import tempfile
 
+from repro.core.driver import Compiler
 from repro.core.frontend.kernelgen import get_bench
-from repro.core.frontend.stencil import lower_to_ptx
-from repro.core.passes import PipelineConfig, compile_kernel
 from repro.core.ptx import print_kernel
 from repro.core.targets import resolve_target, unregister_target
 from repro.core.targets.calibrate import (
@@ -46,10 +45,11 @@ def main():
         print(f"  {param:<9} fitted vs Table 1: rel err {err:.2e}")
 
     # 3. the tuned profile drives cost selection through the registry
-    kernel = lower_to_ptx(get_bench("jacobi").program)
-    out, rep = compile_kernel(
-        kernel, PipelineConfig(target=fit.profile.name, selection="cost"),
-        cache=None)
+    # (Bench ingestion: the driver's kernelgen frontend lowers it)
+    result = Compiler().compile(get_bench("jacobi"),
+                                target=fit.profile.name, selection="cost",
+                                cache=None)
+    out, rep = result.module.kernels[0], result.reports[0]
     kept = rep.selection.n_kept
     print(f"\nselection='cost' on {fit.profile.name}: kept "
           f"{kept}/{len(rep.selection.scores)} jacobi candidates "

@@ -1,6 +1,6 @@
 """Example: one PTX module, per-architecture variants in one call.
 
-``compile_for_targets`` runs the expensive symbolic-emulation +
+``Compiler.variants`` runs the expensive symbolic-emulation +
 detection prefix once per kernel, then replays the cheap selection +
 synthesis tail per registered target profile:
 
@@ -14,9 +14,9 @@ synthesis tail per registered target profile:
 Run:  PYTHONPATH=src python examples/multi_target.py
 """
 
+from repro.core.driver import Compiler
 from repro.core.frontend.kernelgen import get_bench
 from repro.core.frontend.stencil import lower_to_ptx
-from repro.core.passes import GLOBAL_CACHE, compile_for_targets
 from repro.core.ptx import print_kernel
 from repro.core.targets import resolve_target
 
@@ -25,11 +25,12 @@ def main():
     kernel = lower_to_ptx(get_bench("jacobi").program)
     text = print_kernel(kernel)
 
-    variants = compile_for_targets(text, selection="cost")
+    compiler = Compiler(selection="cost")      # session-wide option
+    variants = compiler.variants(text)
     print(f"{'target':<9}{'sm':<7}{'ptx':<6}{'kept':<7}"
           f"{'l1/shfl':<9}encoding")
     for name, v in variants.items():
-        prof = v.target
+        prof = v.target_profile
         lines = v.ptx.splitlines()
         enc = next((l.strip().split()[0] for l in lines if "shfl." in l),
                    "(no shuffles)")
@@ -49,8 +50,7 @@ def main():
 
     # the shared prefix means N targets != N emulations: recompiling for
     # every target after a warm analysis is pure cache+tail work
-    s = GLOBAL_CACHE.stats
-    print(f"\ncompile cache: {s.summary}")
+    print(f"\ncompile cache: {compiler.cache_stats.summary}")
     print(f"\nmulti_target OK — {len(variants)} per-architecture variants "
           f"(default target: {resolve_target(None).name})")
 

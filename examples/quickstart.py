@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.core.frontend.stencil import Array, I, J, Program, Scalar, lower_to_ptx
 from repro.core.ptx import print_kernel
-from repro.core.passes import compile_kernel
+from repro.core.driver import Compiler
 from repro.core.emulator.concrete import run_concrete
 from repro.core.emulator.cycles import speedup_table
 from repro.core.frontend.pallas_lower import synthesize_tpu
@@ -39,16 +39,23 @@ def main():
     prog = Program(name="jacobi", ndim=2, out=Array("w1")[I(), J()],
                    expr=expr, scalars=["c0", "c1", "c2"], lang="F")
 
-    # -- 2-3. PTXASW (pass-manager middle-end) ----------------------------
+    # -- 2-3. PTXASW through the driver facade ----------------------------
+    # one Compiler session owns options, a session-scoped result cache,
+    # and the worker pool; it ingests the DSL program directly (the
+    # stencil frontend lowers it) and returns a structured CompileResult
+    compiler = Compiler()
     kernel = lower_to_ptx(prog)
-    synthesized, report = compile_kernel(kernel)
+    result = compiler.compile(prog)
+    synthesized, report = result.module.kernels[0], result.reports[0]
     print("== detection ==")
     print(report.summary)
     print("  passes:", " -> ".join(f"{n} {t * 1e3:.1f}ms"
-                                   for n, t in report.pass_times.items()))
-    _, again = compile_kernel(kernel)
-    assert again.cached, "second compile should hit the result cache"
-    print("  recompile: served from the content-addressed cache")
+                                   for n, t in result.pass_times.items()))
+    again = compiler.compile(kernel)   # same PTX via a different frontend
+    assert again.cached, "second compile should hit the session cache"
+    assert again.ptx == result.ptx, "frontends must normalize identically"
+    print(f"  recompile: served from the session cache "
+          f"({compiler.cache_stats.summary})")
     for p in report.detection.pairs:
         print(f"  load@{p.dst_uid} covered by load@{p.src_uid} "
               f"shfl delta N={p.delta}")

@@ -1,3 +1,13 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# The public surface is the driver facade (repro.core.driver.Compiler);
+# it is re-exported lazily so `import repro.core` stays import-light.
+
+
+def __getattr__(name):
+    if name == "driver":
+        import importlib
+        return importlib.import_module(".driver", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

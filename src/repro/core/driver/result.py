@@ -1,0 +1,94 @@
+"""Structured compile results and diagnostics.
+
+One :class:`CompileResult` replaces the heterogeneous tuples the free
+functions returned (``(Kernel, report)`` / ``(str, [reports])`` /
+``(Module, [reports])`` / bare report): output PTX text *and* module,
+per-kernel :class:`~repro.core.passes.KernelReport`\\ s, aggregated
+pass timings, a cache-stats snapshot, selection decisions (inside the
+reports), and severity-levelled diagnostics.
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from ..passes.cache import CacheStats
+from ..passes.manager import KernelReport
+from ..ptx.ir import Module
+from ..targets import TargetProfile
+from .options import CompilerOptions
+
+
+class Severity(enum.IntEnum):
+    NOTE = 0
+    WARNING = 1
+    ERROR = 2
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One driver/frontend/pass message attached to a result."""
+
+    severity: Severity
+    message: str
+    source: str = "driver"          # "driver", a frontend or pass name
+    kernel: Optional[str] = None    # kernel it concerns, when any
+
+    def __str__(self) -> str:
+        where = f" [{self.kernel}]" if self.kernel else ""
+        return f"{self.severity.name.lower()}: {self.source}{where}: " \
+               f"{self.message}"
+
+
+@dataclass
+class CompileResult:
+    """Everything one ``Compiler.compile/analyze/variants`` run produced."""
+
+    ptx: str                              # printed output module
+    module: Module                        # output module (input for analyze)
+    reports: List[KernelReport]           # per-kernel, module order
+    options: CompilerOptions              # options resolved for this run
+    frontend: str                         # which ingestion form matched
+    cache_stats: CacheStats = field(default_factory=CacheStats)
+    diagnostics: List[Diagnostic] = field(default_factory=list)
+    wall_time_s: float = 0.0
+    analysis_only: bool = False
+    target_profile: Optional[TargetProfile] = None   # set by variants()
+
+    # ------------------------------------------------------------------
+    @property
+    def by_kernel(self) -> Dict[str, KernelReport]:
+        return {r.name: r for r in self.reports}
+
+    @property
+    def n_shuffles(self) -> int:
+        return sum(r.detection.n_shuffles for r in self.reports
+                   if r.detection is not None)
+
+    @property
+    def cached(self) -> bool:
+        """True iff every kernel was served from the result cache."""
+        return bool(self.reports) and all(r.cached for r in self.reports)
+
+    @property
+    def pass_times(self) -> Dict[str, float]:
+        """Per-pass wall time summed over kernels, pipeline order."""
+        total: Dict[str, float] = {}
+        for rep in self.reports:
+            for name, dt in rep.pass_times.items():
+                total[name] = total.get(name, 0.0) + dt
+        return total
+
+    def diagnostics_at(self, severity: Severity) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity >= severity]
+
+    @property
+    def summary(self) -> str:
+        kinds = "analysis" if self.analysis_only else "compile"
+        tgt = f"@{self.target_profile.name}" if self.target_profile else ""
+        return (f"{kinds}{tgt}: {len(self.reports)} kernel(s) via "
+                f"{self.frontend}, {self.n_shuffles} shuffle(s), "
+                f"{self.wall_time_s:.3f}s"
+                + (" [cached]" if self.cached else ""))

@@ -19,7 +19,6 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.frontend.stencil import Program, lower_to_ptx
-from repro.core.passes import PipelineConfig, analyze_kernel
 from repro.core.synthesis.detect import DetectionResult
 from repro.kernels.stencil.stencil import FetchPlan, make_plan
 
@@ -40,15 +39,23 @@ class TpuShufflePlan:
         return self.detection.n_shuffles
 
 
-def synthesize_tpu(prog: Program, max_delta: int = 31) -> TpuShufflePlan:
+def synthesize_tpu(prog: Program, max_delta: int = 31,
+                   compiler=None) -> TpuShufflePlan:
     """Run the full paper pipeline on the program's PTX lowering, then
-    derive the detection-guided Pallas plan and cross-check them."""
+    derive the detection-guided Pallas plan and cross-check them.
+
+    ``compiler`` is the :class:`repro.core.driver.Compiler` session to
+    analyze through (defaults to the process-default session, whose
+    shared result cache means repeated plans for the same program — the
+    serving / traffic paths — skip re-emulation entirely).
+    """
+    from repro.core.driver import default_compiler
+
     kernel = lower_to_ptx(prog)
-    # analysis-only pipeline (emulate + detect, no codegen) through the
-    # shared result cache: repeated plans for the same program — the
-    # serving / traffic paths — skip re-emulation entirely
-    report = analyze_kernel(kernel, PipelineConfig(max_delta=max_delta))
-    detection = report.detection
+    # analysis-only path (emulate + detect, no codegen)
+    result = (compiler or default_compiler()).analyze(
+        kernel, max_delta=max_delta)
+    detection = result.reports[0].detection
     try:
         plan = make_plan(prog, "paper")
     except ValueError:

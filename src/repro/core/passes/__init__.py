@@ -9,26 +9,22 @@ Public API::
         register_analysis, GLOBAL_CACHE,
     )
 
-``compile_*`` run the default ``emulate-flows -> detect-shuffles ->
-select-shuffles -> synthesize-shuffles`` pipeline through the
-process-wide result cache; ``analyze_kernel`` runs the analysis-only
-prefix (no codegen), which the TPU frontend uses to get detection
-without synthesizing PTX; ``compile_for_targets`` produces
-per-architecture PTX variants in one call, sharing the
-target-independent emulate/detect prefix across targets.
+The ``compile_*`` / ``analyze_kernel`` free functions are thin
+delegating shims over one default :class:`repro.core.driver.Compiler`
+session (which shares the process-wide result cache, preserving their
+historical caching behaviour); ``compile_for_targets`` delegates to
+``Compiler.variants``.  New code should construct its own ``Compiler``
+— session-scoped cache, explicit job pool, structured
+``CompileResult`` — instead of these tuple-returning wrappers.
 """
 
 from __future__ import annotations
 
-import concurrent.futures
 import dataclasses
-import os
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from ..ptx.ir import Kernel, Module
-from ..ptx.parser import parse
-from ..ptx.printer import print_module
-from ..targets import TargetProfile, resolve_target, target_names
+from ..targets import TargetProfile
 from .analyses import AliasFacts, BasicBlock, CFG  # noqa: F401
 from .cache import CacheStats, CompileCache, GLOBAL_CACHE  # noqa: F401
 from .context import (  # noqa: F401
@@ -51,14 +47,61 @@ from .manager import (  # noqa: F401
 )
 from . import stages  # noqa: F401  (registers the built-in passes)
 
+__all__ = [
+    "ANALYSIS_PASSES",
+    "ANALYSIS_REGISTRY",
+    "AliasFacts",
+    "BasicBlock",
+    "CFG",
+    "CacheStats",
+    "CompileCache",
+    "DEFAULT_PASSES",
+    "GLOBAL_CACHE",
+    "KernelContext",
+    "KernelReport",
+    "PASS_REGISTRY",
+    "Pass",
+    "PassPipeline",
+    "PipelineConfig",
+    "SYNTHESIS_PASSES",
+    "TargetVariant",
+    "analyze_kernel",
+    "compile_for_targets",
+    "compile_kernel",
+    "compile_module",
+    "compile_ptx",
+    "default_pipeline",
+    "register_analysis",
+    "register_pass",
+    "set_default_jobs",
+]
+
+
+def _session():
+    """The default driver session (lazy import: driver imports us)."""
+    from ..driver import default_compiler
+    return default_compiler()
+
+
+def _check_exclusive(config, pipeline) -> None:
+    """``config=`` and ``pipeline=`` both carry a PipelineConfig; taking
+    both used to silently drop ``config`` — now it is a hard error."""
+    if config is not None and pipeline is not None:
+        raise ValueError(
+            "pass either config= or pipeline=, not both (a pipeline "
+            "already carries its own PipelineConfig)")
+
 
 def compile_kernel(kernel: Kernel, config: Optional[PipelineConfig] = None,
                    *, cache: Optional[CompileCache] = GLOBAL_CACHE,
                    pipeline: Optional[PassPipeline] = None
                    ) -> Tuple[Kernel, KernelReport]:
     """Run one kernel through the (default) middle-end pipeline."""
-    pipeline = pipeline or PassPipeline(config=config)
-    return pipeline.run_kernel(kernel, cache=cache)
+    _check_exclusive(config, pipeline)
+    if pipeline is not None:
+        return pipeline.run_kernel(kernel, cache=cache)
+    res = _session().compile(kernel, config, cache=cache)
+    return res.module.kernels[0], res.reports[0]
 
 
 def compile_module(module: Module, config: Optional[PipelineConfig] = None,
@@ -67,8 +110,11 @@ def compile_module(module: Module, config: Optional[PipelineConfig] = None,
                    pipeline: Optional[PassPipeline] = None
                    ) -> Tuple[Module, List[KernelReport]]:
     """Compile a whole module (kernels in parallel, directives preserved)."""
-    pipeline = pipeline or PassPipeline(config=config)
-    return pipeline.run_module(module, jobs=jobs, cache=cache)
+    _check_exclusive(config, pipeline)
+    if pipeline is not None:
+        return pipeline.run_module(module, jobs=jobs, cache=cache)
+    res = _session().compile(module, _with_jobs(config, jobs), cache=cache)
+    return res.module, res.reports
 
 
 def compile_ptx(ptx_text: str, config: Optional[PipelineConfig] = None,
@@ -76,19 +122,31 @@ def compile_ptx(ptx_text: str, config: Optional[PipelineConfig] = None,
                 cache: Optional[CompileCache] = GLOBAL_CACHE
                 ) -> Tuple[str, List[KernelReport]]:
     """PTX text in, synthesized PTX text out (the assembler-wrapper path)."""
-    module = parse(ptx_text)
-    out_module, reports = compile_module(module, config, jobs=jobs,
-                                         cache=cache)
-    return print_module(out_module), reports
+    res = _session().compile(ptx_text, _with_jobs(config, jobs), cache=cache)
+    return res.ptx, res.reports
 
 
 def analyze_kernel(kernel: Kernel, config: Optional[PipelineConfig] = None,
-                   *, cache: Optional[CompileCache] = GLOBAL_CACHE
+                   *, jobs: Optional[int] = None,
+                   cache: Optional[CompileCache] = GLOBAL_CACHE,
+                   pipeline: Optional[PassPipeline] = None
                    ) -> KernelReport:
     """Emulate + detect only (no synthesis); returns the report."""
-    pipeline = PassPipeline(passes=ANALYSIS_PASSES, config=config)
-    _, report = pipeline.run_kernel(kernel, cache=cache)
-    return report
+    _check_exclusive(config, pipeline)
+    if pipeline is not None:
+        _, report = pipeline.run_kernel(kernel, cache=cache)
+        return report
+    res = _session().analyze(kernel, _with_jobs(config, jobs), cache=cache)
+    return res.reports[0]
+
+
+def _with_jobs(config: Optional[PipelineConfig], jobs: Optional[int]):
+    """Bridge the legacy ``jobs=`` kwarg into a per-call options object."""
+    if jobs is None:
+        return config
+    from ..driver import CompilerOptions
+    opts = CompilerOptions(jobs=jobs)
+    return opts.with_pipeline_config(config) if config is not None else opts
 
 
 @dataclasses.dataclass
@@ -105,18 +163,6 @@ class TargetVariant:
                    if r.detection is not None)
 
 
-def _analysis_config(config: PipelineConfig) -> PipelineConfig:
-    """The target-independent view of a config: detection depends only
-    on ``max_delta`` and ``lane``, so normalizing everything else lets
-    all targets (and plain ``analyze_kernel`` calls) share one cache
-    entry per kernel.  The target is pinned to the default profile's
-    name (the same cache token as ``None``) so a module's ``.target``
-    directive cannot fork the shared prefix entry."""
-    from ..targets import default_target
-    return PipelineConfig(max_delta=config.max_delta, lane=config.lane,
-                          target=default_target().name)
-
-
 def compile_for_targets(ptx_text: str,
                         targets: Optional[Sequence[
                             Union[str, TargetProfile]]] = None,
@@ -127,50 +173,19 @@ def compile_for_targets(ptx_text: str,
                         ) -> Dict[str, TargetVariant]:
     """Compile one PTX module into per-architecture variants.
 
-    The expensive, target-independent prefix (symbolic emulation +
+    Shim over :meth:`repro.core.driver.Compiler.variants`: the
+    expensive, target-independent prefix (symbolic emulation +
     detection) runs once per kernel; every target then replays only the
-    cheap selection + synthesis tail with its own profile (encoding,
-    warp width, cost model).  ``targets`` defaults to every registered
-    profile; ``selection`` overrides the config's candidate policy
-    (pass ``"cost"`` for cycle-model-guided per-target selection).
-    Returns ``{profile name: TargetVariant}`` in ascending sm order.
+    cheap selection + synthesis tail with its own profile.  ``targets``
+    defaults to every registered profile; ``selection`` overrides the
+    config's candidate policy.  Returns ``{profile name:
+    TargetVariant}`` in ascending sm order.
     """
     base = config or PipelineConfig()
     if selection is not None:
         base = dataclasses.replace(base, selection=selection)
-    profiles = [resolve_target(t)
-                for t in (targets if targets is not None else target_names())]
-    module = parse(ptx_text)
-
-    # the prefix dominates wall clock (symbolic emulation), so it fans
-    # out over kernels exactly like run_module before targets fan out
-    prefix = PassPipeline(passes=ANALYSIS_PASSES,
-                          config=_analysis_config(base))
-    prefix_module, prefix_reports = prefix.run_module(module, jobs=jobs,
-                                                      cache=cache)
-    del prefix_module  # analysis-only: kernels pass through unchanged
-    detections = {rep.name: rep.detection for rep in prefix_reports}
-
-    def build(profile: TargetProfile) -> TargetVariant:
-        cfg = dataclasses.replace(base, target=profile.name)
-        tail = PassPipeline(passes=SYNTHESIS_PASSES, config=cfg)
-        out = Module(kernels=[], version=profile.ptx_version,
-                     target=profile.sm_name,
-                     address_size=profile.address_size)
-        reports: List[KernelReport] = []
-        for kernel in module.kernels:
-            new_kernel, rep = tail.run_kernel(
-                kernel, cache=cache,
-                products={"detection": detections[kernel.name]})
-            out.kernels.append(new_kernel)
-            reports.append(rep)
-        return TargetVariant(target=profile, ptx=print_module(out),
-                             reports=reports)
-
-    n = jobs if jobs is not None else min(len(profiles), os.cpu_count() or 1)
-    if len(profiles) <= 1 or n <= 1:
-        variants = [build(p) for p in profiles]
-    else:
-        with concurrent.futures.ThreadPoolExecutor(max_workers=n) as ex:
-            variants = list(ex.map(build, profiles))
-    return {v.target.name: v for v in variants}
+    results = _session().variants(ptx_text, targets=targets,
+                                  config=_with_jobs(base, jobs), cache=cache)
+    return {name: TargetVariant(target=res.target_profile, ptx=res.ptx,
+                                reports=res.reports)
+            for name, res in results.items()}

@@ -104,7 +104,13 @@ _DEFAULT_JOBS: Optional[int] = None
 
 
 def set_default_jobs(n: Optional[int]) -> None:
-    """Set the process-wide default worker count for module compiles."""
+    """Set the process-wide default worker count for module compiles.
+
+    Deprecated escape hatch: prefer a session-scoped
+    ``repro.core.driver.Compiler(jobs=N)`` — the driver always passes
+    its own worker count explicitly, so this global only affects
+    callers that reach the pipeline without a session.
+    """
     global _DEFAULT_JOBS
     _DEFAULT_JOBS = n
 

@@ -1,0 +1,88 @@
+"""PTX compile service: the driver facade under serving traffic.
+
+Laptop-scale demo of the serving shape the ROADMAP's north star needs:
+one :class:`repro.core.driver.Compiler` session fronting a stream of
+compile requests (here: KernelGen suite benches, repeated the way a
+fleet of identical model replicas would re-request the same kernels).
+Requests fan out over the session pool via ``submit()`` /
+``compile_many()``; ``compile_many``'s up-front dedup guarantees one
+symbolic emulation per *distinct* kernel in a batch, and the session
+cache serves later requests (``submit`` included) without re-emulating
+— concurrent cold ``submit``\\ s of the same kernel may still race into
+a few duplicate emulations, which the assertion below tolerates.
+
+  PYTHONPATH=src python -m repro.launch.ptx_service \
+      --requests 64 --jobs 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import random
+import time
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64,
+                    help="total compile requests to serve")
+    ap.add_argument("--jobs", type=int, default=8,
+                    help="session worker threads")
+    ap.add_argument("--benches", default="jacobi,laplacian,gradient,"
+                    "divergence,vecadd,wave13pt",
+                    help="comma list of KernelGen benches to draw from")
+    ap.add_argument("--selection", default="all", choices=("all", "cost"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.core.driver import Compiler
+    from repro.core.frontend.kernelgen import get_bench
+
+    names = args.benches.split(",")
+    rng = random.Random(args.seed)
+    requests = [get_bench(rng.choice(names)) for _ in range(args.requests)]
+
+    with Compiler(jobs=args.jobs, selection=args.selection) as compiler:
+        # async path: every request is its own future on the session pool
+        t0 = time.perf_counter()
+        futures = [compiler.submit(req) for req in requests[: len(names)]]
+        for fut in futures:
+            fut.result()
+        warm_s = time.perf_counter() - t0
+
+        # batched path: dedup guarantees one emulate/detect per distinct
+        # kernel even for a cold cache full of repeats
+        t0 = time.perf_counter()
+        results = compiler.compile_many(requests)
+        batch_s = time.perf_counter() - t0
+
+        stats = compiler.cache_stats
+        n_shuffles = sum(r.n_shuffles for r in results)
+        distinct = len({r.ptx for r in results})
+        summary = {
+            "requests": len(requests),
+            "distinct_kernels": distinct,
+            "shuffles_total": n_shuffles,
+            "warm_s": round(warm_s, 3),
+            "batch_s": round(batch_s, 3),
+            "cache": stats.summary,
+            "pass_times": {k: round(v, 4)
+                           for k, v in compiler.pass_times.items()},
+        }
+        emulations = compiler.pass_times.get("emulate-flows")
+        print(f"served {len(requests)} requests over {distinct} distinct "
+              f"kernels in {batch_s:.3f}s (warm-up {warm_s:.3f}s)")
+        print(f"  cache: {stats.summary}")
+        print(f"  session pass times: "
+              + " ".join(f"{k}={v * 1e3:.1f}ms"
+                         for k, v in compiler.pass_times.items()))
+        assert stats.misses <= 2 * distinct + len(names), (
+            "dedup failed: more cache misses than distinct compile units",
+            stats.summary)
+        assert emulations is not None
+        print("ptx_service OK")
+        return summary
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,432 @@
+"""Driver-facade tests: polymorphic Source ingestion, byte-identity
+with the legacy free-function/ptxasw paths, variants vs
+compile_for_targets, session-cache scoping, the batched/async serving
+path under concurrent load, conflicting-argument errors, and the
+one-shot deprecation warning on the ptxasw wrappers."""
+
+import concurrent.futures
+import threading
+import warnings
+
+import pytest
+
+import repro.core.passes.analyses as analyses_mod
+import repro.core.synthesis.pipeline as legacy_pipeline
+from repro.core.driver import (
+    Compiler,
+    CompilerOptions,
+    frontend_names,
+    normalize_source,
+)
+from repro.core.emulator.machine import emulate
+from repro.core.frontend.kernelgen import get_bench
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.passes import (
+    GLOBAL_CACHE,
+    PassPipeline,
+    PipelineConfig,
+    analyze_kernel,
+    compile_for_targets,
+    compile_kernel,
+    compile_module,
+    compile_ptx,
+)
+from repro.core.ptx import parse, print_kernel
+from repro.core.synthesis.pipeline import ptxasw, ptxasw_kernel
+
+
+def _jacobi_kernel():
+    return lower_to_ptx(get_bench("jacobi").program)
+
+
+def _count_emulate(monkeypatch):
+    calls = []
+
+    def counting(kernel, **kw):
+        calls.append(kernel.name)
+        return emulate(kernel, **kw)
+
+    monkeypatch.setattr(analyses_mod, "emulate", counting)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# Source ingestion: every form, byte-identical output
+# ---------------------------------------------------------------------------
+
+def test_all_source_forms_byte_identical():
+    """PTX text, Module, Kernel, stencil Program and KernelGen Bench
+    must produce byte-identical PTX through one Compiler.compile."""
+    bench = get_bench("jacobi")
+    kernel = lower_to_ptx(bench.program)
+    text = print_kernel(kernel)
+    sources = {
+        "ptx": text,
+        "module": parse(text),
+        "kernel": kernel,
+        "stencil": bench.program,
+        "kernelgen": bench,
+    }
+    cc = Compiler()
+    results = {name: cc.compile(src) for name, src in sources.items()}
+    ptxs = {res.ptx for res in results.values()}
+    assert len(ptxs) == 1, "source forms diverged"
+    for name, res in results.items():
+        assert res.frontend == name
+        assert res.reports[0].detection.n_shuffles == 6
+
+
+def test_frontend_registry_contents_and_unknown_source():
+    assert set(frontend_names()) >= {"ptx", "module", "kernel",
+                                     "stencil", "kernelgen"}
+    with pytest.raises(TypeError, match="no frontend accepts"):
+        normalize_source(12345)
+
+
+def test_bench_ingestion_applies_max_delta_hint():
+    """hypterm carries the paper's |N|<=1 restriction on the Bench; the
+    kernelgen frontend must apply it when the caller sets nothing."""
+    bench = get_bench("hypterm")
+    assert bench.max_delta == 1
+    cc = Compiler()
+    res = cc.compile(bench, cache=None)
+    assert res.reports[0].detection.n_shuffles == 12     # paper: 12/48
+    assert any("max_delta" in d.message for d in res.diagnostics)
+    # an explicit caller setting beats the hint: at |N|<=31 the 3-wide
+    # rows each cover two deltas instead of one, so detection grows
+    res31 = cc.compile(bench, max_delta=31, cache=None)
+    assert res31.options.max_delta == 31
+    assert res31.reports[0].detection.n_shuffles > 12
+
+
+# ---------------------------------------------------------------------------
+# byte-identity with the legacy paths (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["jacobi", "gaussblur", "laplacian",
+                                  "whispering", "wave13pt"])
+def test_compiler_matches_legacy_paths(name):
+    bench = get_bench(name)
+    kernel = lower_to_ptx(bench.program)
+    text = print_kernel(kernel)
+    res = Compiler().compile(text, max_delta=bench.max_delta, cache=None)
+    legacy_text, _ = compile_ptx(
+        text, PipelineConfig(max_delta=bench.max_delta), cache=None)
+    assert res.ptx == legacy_text
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        wrapper_text, _ = ptxasw(text, max_delta=bench.max_delta)
+    assert res.ptx == wrapper_text
+
+
+def test_variants_matches_compile_for_targets():
+    text = print_kernel(_jacobi_kernel())
+    mine = Compiler().variants(text, selection="cost", cache=None)
+    legacy = compile_for_targets(text, selection="cost", cache=None)
+    assert set(mine) == set(legacy)
+    for name in mine:
+        assert mine[name].ptx == legacy[name].ptx, name
+        assert mine[name].n_shuffles == legacy[name].n_shuffles
+        assert mine[name].target_profile.name == legacy[name].target.name
+
+
+def test_variants_shares_analysis_prefix(monkeypatch):
+    calls = _count_emulate(monkeypatch)
+    cc = Compiler()
+    cc.variants(print_kernel(_jacobi_kernel()),
+                targets=["kepler", "pascal", "volta"])
+    assert len(calls) == 1, "N targets must cost one symbolic emulation"
+
+
+# ---------------------------------------------------------------------------
+# session scoping: cache + options + pool
+# ---------------------------------------------------------------------------
+
+def test_session_cache_is_private_by_default():
+    kernel = _jacobi_kernel()
+    before = (GLOBAL_CACHE.stats.hits, GLOBAL_CACHE.stats.misses)
+    cc = Compiler()
+    assert cc.cache is not GLOBAL_CACHE
+    res1 = cc.compile(kernel)
+    res2 = cc.compile(kernel)
+    assert not res1.cached and res2.cached
+    assert (GLOBAL_CACHE.stats.hits, GLOBAL_CACHE.stats.misses) == before, \
+        "a private session leaked into the process-wide cache"
+    assert cc.cache_stats.hits == 1 and cc.cache_stats.misses == 1
+
+
+def test_share_global_cache_opt_in():
+    assert Compiler(share_global_cache=True).cache is GLOBAL_CACHE
+
+
+def test_session_options_and_per_call_overrides():
+    cc = Compiler(selection="cost", target="pascal")
+    res = cc.compile(_jacobi_kernel(), cache=None)
+    assert res.reports[0].selection is not None
+    assert res.reports[0].target == "pascal"
+    res2 = cc.compile(_jacobi_kernel(), target="volta", cache=None)
+    assert res2.reports[0].target == "volta"
+    # config= and field overrides are mutually exclusive
+    with pytest.raises(ValueError, match="not both"):
+        cc.compile(_jacobi_kernel(), PipelineConfig(), target="volta")
+    with pytest.raises(ValueError, match="not both"):
+        Compiler(CompilerOptions(), jobs=2)
+    with pytest.raises(TypeError, match="unknown CompilerOptions field"):
+        cc.compile(_jacobi_kernel(), no_such_option=1)
+
+
+def test_compile_result_structure():
+    cc = Compiler()
+    res = cc.compile(print_kernel(_jacobi_kernel()))
+    assert res.by_kernel["jacobi"].detection.n_shuffles == 6
+    assert res.n_shuffles == 6
+    assert set(res.pass_times) == {"emulate-flows", "detect-shuffles",
+                                   "select-shuffles", "synthesize-shuffles"}
+    assert res.wall_time_s > 0
+    from repro.core.driver import Severity
+    assert res.diagnostics, "driver must attach at least the routing note"
+    assert not res.diagnostics_at(Severity.ERROR)
+    assert res.cache_stats.misses == 1
+    assert "compile" in res.summary and "1 kernel" in res.summary
+    ana = cc.analyze(print_kernel(_jacobi_kernel()))
+    assert ana.analysis_only and ana.ptx  # analysis passes kernel through
+    assert ana.reports[0].detection.n_shuffles == 6
+
+
+def test_session_pass_time_aggregation():
+    cc = Compiler()
+    cc.compile(_jacobi_kernel(), cache=None)
+    cc.compile(lower_to_ptx(get_bench("laplacian").program), cache=None)
+    times = cc.pass_times
+    assert times["emulate-flows"] > 0 and times["synthesize-shuffles"] > 0
+    assert cc.n_runs == 2
+
+
+def test_cache_hits_do_not_inflate_session_pass_times():
+    """A hit's report snapshots the original run's timings; the session
+    aggregate must not re-count them once per hit."""
+    cc = Compiler()
+    cc.compile(_jacobi_kernel())
+    after_miss = cc.pass_times
+    for _ in range(5):
+        assert cc.compile(_jacobi_kernel()).cached
+    assert cc.pass_times == after_miss, \
+        "cached compiles added phantom pass time"
+    assert cc.n_runs == 6
+
+
+def test_session_level_explicit_option_beats_source_hint():
+    """Any field the session constructor was handed is an explicit
+    choice: a Bench's max_delta hint must not override it — even when
+    the handed value equals the default."""
+    bench = get_bench("hypterm")           # carries max_delta=1 hint
+    res = Compiler(max_delta=5).compile(bench, cache=None)
+    assert res.options.max_delta == 5
+    res31 = Compiler(max_delta=31).compile(bench, cache=None)
+    assert res31.options.max_delta == 31, \
+        "an explicitly-passed default value was treated as unset"
+    # a full options= object counts as choosing every field
+    res_opts = Compiler(CompilerOptions()).compile(bench, cache=None)
+    assert res_opts.options.max_delta == 31
+    # untouched session default: the hint applies
+    res_default = Compiler().compile(bench, cache=None)
+    assert res_default.options.max_delta == 1
+
+
+def test_session_ignores_process_wide_default_jobs():
+    """Compiler sessions must not inherit the deprecated
+    set_default_jobs() global (session isolation)."""
+    from repro.core.passes import set_default_jobs
+    import repro.core.passes.manager as manager_mod
+    texts = [print_kernel(lower_to_ptx(get_bench(n).program))
+             for n in ("jacobi", "laplacian")]
+    module_text = "\n".join(texts)
+    set_default_jobs(1)
+    try:
+        seen = []
+        orig = PassPipeline.run_module
+
+        def spy(self, module, jobs=None, cache=None):
+            seen.append(jobs)
+            return orig(self, module, jobs=jobs, cache=cache)
+
+        PassPipeline.run_module = spy
+        try:
+            Compiler().compile(module_text, cache=None)
+        finally:
+            PassPipeline.run_module = orig
+        assert seen and all(j is not None for j in seen), \
+            "a None jobs= reached run_module and picked up the global"
+        assert manager_mod._DEFAULT_JOBS == 1   # global untouched
+    finally:
+        set_default_jobs(None)
+
+
+def test_cache_and_share_global_cache_conflict():
+    from repro.core.passes import CompileCache
+    with pytest.raises(ValueError, match="not both"):
+        Compiler(share_global_cache=True, cache=CompileCache())
+
+
+def test_construction_only_knobs_rejected_per_call():
+    """Session-cache knobs are fixed at construction; a per-call
+    override could only be silently ignored, so it raises instead —
+    whether passed as a kwarg or smuggled in via config=CompilerOptions."""
+    cc = Compiler()
+    with pytest.raises(ValueError, match="Compiler construction"):
+        cc.compile(_jacobi_kernel(), share_global_cache=True)
+    with pytest.raises(ValueError, match="Compiler construction"):
+        cc.compile(_jacobi_kernel(), cache_entries=16)
+    with pytest.raises(ValueError, match="Compiler construction"):
+        cc.compile(_jacobi_kernel(),
+                   CompilerOptions(share_global_cache=True))
+    with pytest.raises(ValueError, match="Compiler construction"):
+        cc.compile(_jacobi_kernel(), CompilerOptions(cache_entries=7))
+    # default-valued fields on a per-call options object are not a
+    # deliberate choice: they inherit the session's cache setup
+    shared = Compiler(share_global_cache=True)
+    res = shared.compile(_jacobi_kernel(), CompilerOptions(), cache=None)
+    assert res.options.share_global_cache, \
+        "per-call options reset the session's construction-only knobs"
+
+
+def test_list_valued_passes_normalized_to_tuple():
+    """CompilerOptions coerces any sequence to a tuple, so passes=
+    stays hashable in compile_many's dedup key."""
+    opts = CompilerOptions(passes=["emulate-flows", "detect-shuffles"])
+    assert opts.passes == ("emulate-flows", "detect-shuffles")
+    cc = Compiler()
+    results = cc.compile_many([_jacobi_kernel(), _jacobi_kernel()],
+                              passes=["emulate-flows", "detect-shuffles"])
+    assert len(results) == 2 and results[1].cached
+    cc.close()
+
+
+def test_jobs_zero_means_minimal_pool():
+    cc = Compiler(jobs=0)
+    fut = cc.submit(print_kernel(_jacobi_kernel()))
+    assert fut.result(timeout=120).n_shuffles == 6
+    assert cc._executor._max_workers == 1
+    cc.close()
+
+
+def test_variants_rejects_passes_override():
+    text = print_kernel(_jacobi_kernel())
+    with pytest.raises(ValueError, match="passes= override"):
+        Compiler().variants(text, passes=("emulate-flows",))
+    with pytest.raises(ValueError, match="passes= override"):
+        Compiler(passes=("emulate-flows",)).variants(text)
+
+
+def test_analyze_honors_passes_override():
+    cc = Compiler(passes=("emulate-flows",))
+    res = cc.analyze(_jacobi_kernel(), cache=None)
+    assert res.reports[0].detection is None, \
+        "analyze() ignored the session passes override"
+    res2 = Compiler().analyze(_jacobi_kernel(), cache=None,
+                              passes=("emulate-flows", "detect-shuffles"))
+    assert res2.reports[0].detection.n_shuffles == 6
+
+
+# ---------------------------------------------------------------------------
+# batched / async serving path
+# ---------------------------------------------------------------------------
+
+def test_compile_many_dedupes_distinct_kernels(monkeypatch):
+    calls = _count_emulate(monkeypatch)
+    jac = get_bench("jacobi")
+    lap = get_bench("laplacian")
+    cc = Compiler(jobs=4)
+    results = cc.compile_many([jac, lap, jac, jac, lap, jac])
+    assert len(results) == 6
+    assert len(calls) == 2, "one emulate/detect per distinct kernel"
+    assert results[0].ptx == results[2].ptx == results[3].ptx
+    assert results[1].ptx == results[4].ptx
+    # duplicate results are isolated copies served through the cache
+    assert results[2].cached and results[5].cached
+    cc.close()
+
+
+def test_submit_concurrent_threads_one_session_cache():
+    """Hammer submit() from concurrent threads against one session."""
+    benches = [get_bench(n) for n in
+               ("jacobi", "laplacian", "gradient", "vecadd")]
+    serial = {b.program.name: Compiler().compile(b, cache=None).ptx
+              for b in benches}
+    cc = Compiler(jobs=8)
+    for b in benches:          # warm the session cache deterministically
+        cc.compile(b)
+    n_client_threads, per_thread = 8, 12
+    errors = []
+
+    def client(tid: int):
+        try:
+            futures = [cc.submit(benches[(tid + i) % len(benches)])
+                       for i in range(per_thread)]
+            for i, fut in enumerate(futures):
+                res = fut.result(timeout=120)
+                want = benches[(tid + i) % len(benches)].program.name
+                assert res.reports[0].name == want
+                assert res.ptx == serial[want], f"corrupt result for {want}"
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=client, args=(t,))
+               for t in range(n_client_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    cc.close()
+    assert not errors, errors
+    stats = cc.cache_stats
+    # warm-up missed once per distinct kernel; with the cache warm,
+    # every concurrent request must be served from it
+    assert stats.misses == len(benches)
+    assert stats.hits == n_client_threads * per_thread
+
+
+def test_submit_returns_future():
+    cc = Compiler()
+    fut = cc.submit(print_kernel(_jacobi_kernel()))
+    assert isinstance(fut, concurrent.futures.Future)
+    assert fut.result(timeout=120).n_shuffles == 6
+    cc.close()
+    cc.close()     # idempotent
+
+
+# ---------------------------------------------------------------------------
+# legacy shims: conflict wart + signatures + deprecation
+# ---------------------------------------------------------------------------
+
+def test_conflicting_config_and_pipeline_raise():
+    kernel = _jacobi_kernel()
+    cfg, pipe = PipelineConfig(), PassPipeline()
+    with pytest.raises(ValueError, match="config= or pipeline="):
+        compile_kernel(kernel, cfg, pipeline=pipe)
+    with pytest.raises(ValueError, match="config= or pipeline="):
+        compile_module(parse(print_kernel(kernel)), cfg, pipeline=pipe)
+    with pytest.raises(ValueError, match="config= or pipeline="):
+        analyze_kernel(kernel, cfg, pipeline=pipe)
+
+
+def test_analyze_kernel_sibling_signature():
+    """analyze_kernel accepts the same pipeline=/jobs= kwargs as its
+    compile_* siblings."""
+    kernel = _jacobi_kernel()
+    rep = analyze_kernel(kernel, jobs=2, cache=None)
+    assert rep.detection.n_shuffles == 6
+    from repro.core.passes import ANALYSIS_PASSES
+    rep2 = analyze_kernel(kernel, cache=None,
+                          pipeline=PassPipeline(passes=ANALYSIS_PASSES))
+    assert rep2.detection.n_shuffles == 6
+
+
+def test_ptxasw_wrappers_warn_once(monkeypatch):
+    monkeypatch.setattr(legacy_pipeline, "_warned", False)
+    kernel = _jacobi_kernel()
+    with pytest.warns(DeprecationWarning, match="Compiler"):
+        ptxasw_kernel(kernel)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        ptxasw(print_kernel(kernel))       # one-shot: second call silent

@@ -1,0 +1,79 @@
+"""Public-API snapshot: the exported surface of the driver facade and
+the pass-manager package is pinned here so accidental drift breaks the
+build (this file), not downstream users.
+
+If you are changing the API *on purpose*, update the snapshot below
+and the ARCHITECTURE.md "Driver API" section together.
+"""
+
+import repro.core.driver as driver
+import repro.core.passes as passes
+
+DRIVER_API = {
+    "Compiler",
+    "CompilerOptions",
+    "CompileResult",
+    "Diagnostic",
+    "NormalizedSource",
+    "Severity",
+    "Source",
+    "SourceFrontend",
+    "default_compiler",
+    "frontend_names",
+    "normalize_source",
+    "register_frontend",
+}
+
+PASSES_API = {
+    "ANALYSIS_PASSES",
+    "ANALYSIS_REGISTRY",
+    "AliasFacts",
+    "BasicBlock",
+    "CFG",
+    "CacheStats",
+    "CompileCache",
+    "DEFAULT_PASSES",
+    "GLOBAL_CACHE",
+    "KernelContext",
+    "KernelReport",
+    "PASS_REGISTRY",
+    "Pass",
+    "PassPipeline",
+    "PipelineConfig",
+    "SYNTHESIS_PASSES",
+    "TargetVariant",
+    "analyze_kernel",
+    "compile_for_targets",
+    "compile_kernel",
+    "compile_module",
+    "compile_ptx",
+    "default_pipeline",
+    "register_analysis",
+    "register_pass",
+    "set_default_jobs",
+}
+
+
+def test_driver_exports_exactly():
+    assert set(driver.__all__) == DRIVER_API
+    missing = [n for n in driver.__all__ if not hasattr(driver, n)]
+    assert not missing, f"__all__ names not importable: {missing}"
+
+
+def test_passes_exports_exactly():
+    assert set(passes.__all__) == PASSES_API
+    missing = [n for n in passes.__all__ if not hasattr(passes, n)]
+    assert not missing, f"__all__ names not importable: {missing}"
+
+
+def test_star_import_surfaces_match_snapshot():
+    ns_driver, ns_passes = {}, {}
+    exec("from repro.core.driver import *", ns_driver)  # noqa: S102
+    exec("from repro.core.passes import *", ns_passes)  # noqa: S102
+    assert DRIVER_API <= set(ns_driver)
+    assert PASSES_API <= set(ns_passes)
+
+
+def test_driver_reachable_from_core():
+    import repro.core
+    assert repro.core.driver is driver   # lazy re-export stays wired
