@@ -7,6 +7,7 @@
   E5  pallas_traffic     TPU port: HBM traffic naive/paper/tile + conv1d
   E7  roofline           dry-run roofline terms + hillclimb picks
   E8  calibrate          autotuned profile fits vs Table 1 (per gen)
+  E9  serving_throughput HTTP service req/s + shared-disk-cache replica
 
 Output: ``name,value,unit,derived`` CSV lines.
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only E1,E5]
@@ -22,7 +23,7 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list of E1,E2,E3,E4,E5,E7,E8")
+                    help="comma list of E1,E2,E3,E4,E5,E7,E8,E9")
     ap.add_argument("--jobs", type=int, default=None,
                     help="worker threads for per-kernel module compiles "
                          "(default: one per kernel, capped at CPU count)")
@@ -30,7 +31,8 @@ def main() -> None:
     from .common import session
     compiler = session(jobs=args.jobs)   # one driver session for all suites
     from . import (calibrate, fig2_cycle_model, pallas_traffic, roofline,
-                   sec85_applications, table1_latency, table2_kernelgen)
+                   sec85_applications, serving_throughput, table1_latency,
+                   table2_kernelgen)
     suites = {
         "E1": ("table2_kernelgen", table2_kernelgen.run),
         "E2": ("fig2_cycle_model", fig2_cycle_model.run),
@@ -43,6 +45,9 @@ def main() -> None:
         # see the same profiles regardless of suite order)
         "E8": ("calibrate", lambda: calibrate.run(save=False,
                                                   register=False)),
+        # self-contained: owns its server sessions + a tmpdir cache_dir
+        # (never the harness session — replica isolation is the point)
+        "E9": ("serving_throughput", serving_throughput.run),
     }
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,value,unit,derived")

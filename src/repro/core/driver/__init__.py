@@ -28,7 +28,12 @@ The legacy free functions (``repro.core.passes.compile_*``) and the
 
 from .compiler import Compiler, default_compiler  # noqa: F401
 from .options import CompilerOptions  # noqa: F401
-from .result import CompileResult, Diagnostic, Severity  # noqa: F401
+from .result import (  # noqa: F401
+    CompileResult,
+    DetectionSummary,
+    Diagnostic,
+    Severity,
+)
 from .source import (  # noqa: F401
     NormalizedSource,
     Source,
@@ -42,6 +47,7 @@ __all__ = [
     "Compiler",
     "CompilerOptions",
     "CompileResult",
+    "DetectionSummary",
     "Diagnostic",
     "NormalizedSource",
     "Severity",

@@ -41,7 +41,8 @@ _SESSION_CACHE = object()
 #: session knobs that configure the cache built in ``Compiler.__init__``
 #: — overriding them per call could only be silently ignored, so it is
 #: rejected instead
-_CONSTRUCTION_ONLY = frozenset({"share_global_cache", "cache_entries"})
+_CONSTRUCTION_ONLY = frozenset({"share_global_cache", "cache_entries",
+                                "cache_dir"})
 
 ConfigLike = Union[None, PipelineConfig, CompilerOptions]
 
@@ -93,12 +94,29 @@ class Compiler:
         if cache is not None and self.options.share_global_cache:
             raise ValueError(
                 "pass either cache= or share_global_cache=True, not both")
+        if self.options.cache_dir is not None and (
+                cache is not None or self.options.share_global_cache):
+            raise ValueError(
+                "cache_dir= attaches a disk tier to the session's own "
+                "private cache; it cannot be combined with cache= or "
+                "share_global_cache=True")
         if cache is not None:
             self._cache: Optional[CompileCache] = cache
         elif self.options.share_global_cache:
             self._cache = GLOBAL_CACHE
         else:
-            self._cache = CompileCache(max_entries=self.options.cache_entries)
+            # the session builds its own cache, so the disk tier can
+            # ride along: explicit cache_dir= wins, then the
+            # REPRO_CACHE_DIR environment (fleet deployments point every
+            # replica at one shared directory)
+            cache_dir = self.options.cache_dir \
+                or os.environ.get("REPRO_CACHE_DIR") or None
+            disk = None
+            if cache_dir is not None:
+                from ..passes.diskcache import DiskCache
+                disk = DiskCache(cache_dir)
+            self._cache = CompileCache(
+                max_entries=self.options.cache_entries, disk=disk)
         self._lock = threading.Lock()
         self._pass_times: Dict[str, float] = {}
         self._n_runs = 0
@@ -282,7 +300,7 @@ class Compiler:
             reports=reports,
             options=opts,
             frontend=ns.frontend,
-            cache_stats=dataclasses.replace(self.cache_stats),
+            cache_stats=self.cache_stats.snapshot(),
             diagnostics=diags,
             wall_time_s=time.perf_counter() - t0,
             analysis_only=analysis_only,
@@ -362,7 +380,7 @@ class Compiler:
             return CompileResult(
                 ptx=print_module(out), module=out, reports=reports,
                 options=tail_opts, frontend=ns.frontend,
-                cache_stats=dataclasses.replace(self.cache_stats),
+                cache_stats=self.cache_stats.snapshot(),
                 diagnostics=list(diags),
                 wall_time_s=time.perf_counter() - t0,
                 target_profile=profile,

@@ -43,6 +43,13 @@ class CompilerOptions:
       ``submit()``/``compile_many()`` pool (``None`` = the executor
       default, ``min(32, cpus + 4)``)
     * ``cache_entries`` — LRU capacity of the session-scoped cache
+    * ``cache_dir`` — directory of the disk-backed cache tier (default
+      off).  When the session builds its own private cache and this is
+      unset, the ``REPRO_CACHE_DIR`` environment variable is honored;
+      sessions on a shared or caller-supplied cache (``cache=`` /
+      ``share_global_cache=True``) never attach a disk tier, so
+      combining those with an explicit ``cache_dir`` is a ``ValueError``
+      and the environment variable does not apply to them
     * ``share_global_cache`` — opt this session into the process-wide
       ``GLOBAL_CACHE`` instead of a private cache
     * ``passes`` — pass-list override, honored by ``compile`` and
@@ -59,6 +66,7 @@ class CompilerOptions:
 
     jobs: Optional[int] = None
     cache_entries: int = 4096
+    cache_dir: Optional[str] = None
     share_global_cache: bool = False
     passes: Optional[Tuple[str, ...]] = None
 

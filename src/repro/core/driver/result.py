@@ -10,6 +10,7 @@ reports), and severity-levelled diagnostics.
 
 from __future__ import annotations
 
+import dataclasses
 import enum
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -17,8 +18,11 @@ from typing import Dict, List, Optional
 from ..passes.cache import CacheStats
 from ..passes.manager import KernelReport
 from ..ptx.ir import Module
-from ..targets import TargetProfile
+from ..targets import TargetProfile, resolve_target
 from .options import CompilerOptions
+
+#: schema stamp of the JSON wire form (`to_json_dict`/`from_json_dict`)
+RESULT_SCHEMA_VERSION = 1
 
 
 class Severity(enum.IntEnum):
@@ -40,6 +44,18 @@ class Diagnostic:
         where = f" [{self.kernel}]" if self.kernel else ""
         return f"{self.severity.name.lower()}: {self.source}{where}: " \
                f"{self.message}"
+
+
+@dataclass(frozen=True)
+class DetectionSummary:
+    """The wire form of a detection result: the scalar facts a remote
+    client needs (`CompileResult.n_shuffles`, report summaries) without
+    shipping flow/instruction objects over HTTP."""
+
+    n_shuffles: int = 0
+    n_loads: int = 0
+    n_flows: int = 0
+    mean_abs_delta: Optional[float] = None
 
 
 @dataclass
@@ -92,3 +108,108 @@ class CompileResult:
                 f"{self.frontend}, {self.n_shuffles} shuffle(s), "
                 f"{self.wall_time_s:.3f}s"
                 + (" [cached]" if self.cached else ""))
+
+    # ------------------------------------------------------------------
+    # JSON wire form (the HTTP serving front-end's response payload)
+    # ------------------------------------------------------------------
+    def to_json_dict(self) -> Dict:
+        """A ``json.dumps``-ready dict of this result.
+
+        The PTX text rides whole (the module is re-parsed on the other
+        side), detections collapse to :class:`DetectionSummary` scalars,
+        and selection objects are dropped — everything a serving client
+        consumes survives; pass-internal objects do not.
+        """
+        def report_dict(rep: KernelReport) -> Dict:
+            d = rep.detection
+            return {
+                "name": rep.name,
+                "cached": rep.cached,
+                "target": rep.target,
+                "emulate_time_s": rep.emulate_time_s,
+                "total_time_s": rep.total_time_s,
+                "pass_times": dict(rep.pass_times),
+                "detection": None if d is None else {
+                    "n_shuffles": d.n_shuffles,
+                    "n_loads": d.n_loads,
+                    "n_flows": d.n_flows,
+                    "mean_abs_delta": d.mean_abs_delta,
+                },
+            }
+
+        opts = {f.name: getattr(self.options, f.name)
+                for f in dataclasses.fields(self.options)}
+        if opts.get("passes") is not None:
+            opts["passes"] = list(opts["passes"])
+        return {
+            "schema": RESULT_SCHEMA_VERSION,
+            "ptx": self.ptx,
+            "frontend": self.frontend,
+            "analysis_only": self.analysis_only,
+            "wall_time_s": self.wall_time_s,
+            "options": opts,
+            "reports": [report_dict(r) for r in self.reports],
+            "cache_stats": self.cache_stats.to_dict(),
+            "diagnostics": [{"severity": d.severity.name,
+                             "message": d.message,
+                             "source": d.source,
+                             "kernel": d.kernel}
+                            for d in self.diagnostics],
+            "target_profile": self.target_profile.name
+            if self.target_profile is not None else None,
+        }
+
+    @classmethod
+    def from_json_dict(cls, payload: Dict) -> "CompileResult":
+        """Rebuild a result from :meth:`to_json_dict` output.
+
+        The module is re-parsed from the PTX text (byte-identity of the
+        print→parse→print round trip is test-pinned), detections come
+        back as :class:`DetectionSummary`, and the cache-stats snapshot
+        keeps only the counter fields JSON carries.
+        """
+        schema = payload.get("schema")
+        if schema != RESULT_SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported CompileResult schema {schema!r} "
+                f"(this build speaks {RESULT_SCHEMA_VERSION})")
+        from ..ptx.parser import parse
+        opts = dict(payload.get("options") or {})
+        if opts.get("passes") is not None:
+            opts["passes"] = tuple(opts["passes"])
+        known = {f.name for f in dataclasses.fields(CompilerOptions)}
+        options = CompilerOptions().replace(
+            **{k: v for k, v in opts.items() if k in known})
+        reports = []
+        for rd in payload.get("reports", ()):
+            det = rd.get("detection")
+            reports.append(KernelReport(
+                name=rd["name"],
+                detection=None if det is None else DetectionSummary(**det),
+                emulate_time_s=rd.get("emulate_time_s", 0.0),
+                total_time_s=rd.get("total_time_s", 0.0),
+                pass_times=dict(rd.get("pass_times") or {}),
+                cached=rd.get("cached", False),
+                target=rd.get("target"),
+            ))
+        stats_fields = {f.name for f in dataclasses.fields(CacheStats)}
+        stats = CacheStats(**{k: v for k, v in
+                              (payload.get("cache_stats") or {}).items()
+                              if k in stats_fields})
+        target_name = payload.get("target_profile")
+        return cls(
+            ptx=payload["ptx"],
+            module=parse(payload["ptx"]),
+            reports=reports,
+            options=options,
+            frontend=payload.get("frontend", "ptx"),
+            cache_stats=stats,
+            diagnostics=[Diagnostic(Severity[d["severity"]], d["message"],
+                                    source=d.get("source", "driver"),
+                                    kernel=d.get("kernel"))
+                         for d in payload.get("diagnostics", ())],
+            wall_time_s=payload.get("wall_time_s", 0.0),
+            analysis_only=payload.get("analysis_only", False),
+            target_profile=resolve_target(target_name)
+            if target_name is not None else None,
+        )

@@ -27,6 +27,7 @@ from ..ptx.ir import Kernel, Module
 from ..targets import TargetProfile
 from .analyses import AliasFacts, BasicBlock, CFG  # noqa: F401
 from .cache import CacheStats, CompileCache, GLOBAL_CACHE  # noqa: F401
+from .diskcache import DiskCache  # noqa: F401
 from .context import (  # noqa: F401
     ANALYSIS_REGISTRY,
     KernelContext,
@@ -56,6 +57,7 @@ __all__ = [
     "CacheStats",
     "CompileCache",
     "DEFAULT_PASSES",
+    "DiskCache",
     "GLOBAL_CACHE",
     "KernelContext",
     "KernelReport",

@@ -1,0 +1,366 @@
+"""Disk-backed cache tier + cache concurrency regressions.
+
+Covers the persistent tier (round trip, promotion into memory, schema
+versioning, corruption tolerance, mtime GC), the put-time report
+validation, the lock-audited ``__len__``/stats reads under a
+multi-thread hammer, the two-process ``cache_dir`` sharing acceptance
+criterion (subprocess), and the CompileResult JSON wire form.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.core.driver import Compiler, CompileResult
+from repro.core.frontend.kernelgen import get_bench
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.passes import (
+    CacheStats,
+    CompileCache,
+    DiskCache,
+    KernelReport,
+    PipelineConfig,
+)
+from repro.core.passes import diskcache as diskcache_mod
+from repro.core.ptx import print_kernel
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _kernel(name="vecadd"):
+    return lower_to_ptx(get_bench(name).program)
+
+
+def _key(kernel, tag="t"):
+    return CompileCache.key(print_kernel(kernel), PipelineConfig(),
+                            (tag,))
+
+
+def _report(name="vecadd", **kw):
+    return KernelReport(name=name, pass_times={"emulate-flows": 0.01},
+                        **kw)
+
+
+# ---------------------------------------------------------------------------
+# disk tier basics
+# ---------------------------------------------------------------------------
+
+def test_disk_roundtrip_and_promotion(tmp_path):
+    kernel = _kernel()
+    key = _key(kernel)
+    disk = DiskCache(tmp_path)
+    first = CompileCache(disk=disk)
+    first.put(key, kernel, _report())
+    assert len(disk) == 1
+
+    # a different CompileCache (a different process, conceptually)
+    # sharing the directory: memory miss -> disk hit -> promoted
+    second = CompileCache(disk=disk)
+    got = second.get(key)
+    assert got is not None
+    out_kernel, out_report = got
+    assert print_kernel(out_kernel) == print_kernel(kernel), \
+        "disk round trip must be byte-identical"
+    assert out_report.cached and out_report.name == "vecadd"
+    stats = second.stats.snapshot()
+    assert (stats.misses, stats.disk_hits, stats.disk_misses) == (1, 1, 0)
+    # promotion: the next lookup is a pure memory hit
+    assert second.get(key) is not None
+    stats = second.stats.snapshot()
+    assert (stats.hits, stats.disk_hits) == (1, 1)
+    assert len(second) == 1
+
+
+def test_disk_miss_counted_without_entry(tmp_path):
+    cache = CompileCache(disk=DiskCache(tmp_path))
+    assert cache.get("0" * 64) is None
+    stats = cache.stats.snapshot()
+    assert (stats.misses, stats.disk_hits, stats.disk_misses) == (1, 0, 1)
+
+
+def test_schema_version_misses_cleanly(tmp_path, monkeypatch):
+    kernel = _kernel()
+    key = _key(kernel)
+    disk = DiskCache(tmp_path)
+    disk.store(key, kernel, _report())
+    assert disk.load(key) is not None
+    # a format bump re-keys the tree: old entries miss, nothing raises
+    monkeypatch.setattr(diskcache_mod, "SCHEMA_VERSION",
+                        diskcache_mod.SCHEMA_VERSION + 1)
+    assert DiskCache(tmp_path).load(key) is None
+
+
+def test_corrupt_entries_are_misses(tmp_path):
+    kernel = _kernel()
+    disk = DiskCache(tmp_path)
+    for victim, garbage in (("report.pkl", b"\x80garbage"),
+                            ("kernel.ptx", b"definitely not ptx {{{")):
+        key = _key(kernel, tag=victim)
+        disk.store(key, kernel, _report())
+        (disk.path_for(key) / victim).write_bytes(garbage)
+        assert disk.load(key) is None, f"corrupt {victim} must miss"
+    # a report that unpickles to a non-dataclass is rejected too
+    key = _key(kernel, tag="nondc")
+    disk.store(key, kernel, _report())
+    import pickle
+    (disk.path_for(key) / "report.pkl").write_bytes(
+        pickle.dumps({"not": "a dataclass"}))
+    assert disk.load(key) is None
+
+
+def test_gc_bounds_size_evicting_oldest_mtime(tmp_path):
+    kernel = _kernel()
+    disk = DiskCache(tmp_path, max_bytes=1)   # everything is over budget
+    keys = [_key(kernel, tag=f"gc{i}") for i in range(3)]
+    # store without triggering gc mid-test: stage entries by hand
+    big = DiskCache(tmp_path, max_bytes=1 << 30)
+    for i, key in enumerate(keys):
+        big.store(key, kernel, _report())
+        # spread mtimes so eviction order is deterministic
+        os.utime(big.path_for(key), (1000 + i, 1000 + i))
+    evicted = disk.gc()
+    assert evicted == 3 and len(disk) == 0
+
+    # partial bound: keep the newest entry only
+    for i, key in enumerate(keys):
+        big.store(key, kernel, _report())
+        os.utime(big.path_for(key), (1000 + i, 1000 + i))
+    entry_bytes = sum(f.stat().st_size
+                      for f in big.path_for(keys[0]).iterdir())
+    partial = DiskCache(tmp_path, max_bytes=entry_bytes)
+    assert partial.gc() == 2
+    assert partial.load(keys[2]) is not None, "newest mtime must survive"
+    assert partial.load(keys[0]) is None and partial.load(keys[1]) is None
+
+
+def test_store_serialization_failure_degrades_to_noop(tmp_path):
+    """An unpicklable pass product must not take the compile down or
+    leak a staging dir — persistence failures degrade to recompilation."""
+    kernel = _kernel()
+    disk = DiskCache(tmp_path)
+    rep = _report()
+    rep.detection = threading.Lock()       # unpicklable
+    key = _key(kernel, tag="unpicklable")
+    assert disk.store(key, kernel, rep) == 0
+    assert disk.load(key) is None
+    assert not any((tmp_path / "tmp").iterdir()), "staging dir leaked"
+
+
+def test_gc_sweeps_orphaned_staging_dirs(tmp_path):
+    """A writer killed mid-store leaves tmp/<uuid> behind; gc() must
+    reap stale stages (but never fresh ones a live writer owns)."""
+    disk = DiskCache(tmp_path)
+    orphan = tmp_path / "tmp" / "deadbeef"
+    orphan.mkdir()
+    (orphan / "kernel.ptx").write_text("x")
+    os.utime(orphan, (1, 1))               # ancient mtime
+    fresh = tmp_path / "tmp" / "live"
+    fresh.mkdir()
+    disk.gc()
+    assert not orphan.exists()
+    assert fresh.exists()
+
+
+def test_put_counts_disk_evictions_in_stats(tmp_path):
+    kernel = _kernel()
+    cache = CompileCache(disk=DiskCache(tmp_path, max_bytes=1))
+    cache.put(_key(kernel, tag="a"), kernel, _report())
+    assert cache.stats.snapshot().disk_evictions >= 1
+
+
+def test_clear_keeps_disk_tier(tmp_path):
+    kernel = _kernel()
+    key = _key(kernel)
+    cache = CompileCache(disk=DiskCache(tmp_path))
+    cache.put(key, kernel, _report())
+    cache.clear()
+    assert len(cache) == 0
+    assert cache.stats.snapshot() == CacheStats()
+    got = cache.get(key)     # still served — from disk
+    assert got is not None and got[1].cached
+    assert cache.stats.snapshot().disk_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfixes: put-time validation + locked len/stats
+# ---------------------------------------------------------------------------
+
+def test_put_rejects_non_dataclass_report(tmp_path):
+    kernel = _kernel()
+    for cache in (CompileCache(), CompileCache(disk=DiskCache(tmp_path))):
+        with pytest.raises(TypeError, match="dataclass"):
+            cache.put(_key(kernel), kernel, {"not": "a dataclass"})
+        assert len(cache) == 0, "a rejected put must not insert"
+    with pytest.raises(TypeError, match="dataclass"):
+        DiskCache(tmp_path).store(_key(kernel), kernel, object())
+
+
+def test_concurrent_get_put_clear_len_no_exceptions():
+    """The __len__ / stats torn-read regression: hammer one cache with
+    mixed operations from many threads; nothing may raise."""
+    kernel = _kernel()
+    cache = CompileCache(max_entries=8)
+    keys = [_key(kernel, tag=f"k{i}") for i in range(16)]
+    report = _report()
+    errors = []
+    stop = threading.Event()
+
+    def hammer(tid):
+        try:
+            for i in range(300):
+                op = (tid + i) % 5
+                key = keys[(tid * 7 + i) % len(keys)]
+                if op == 0:
+                    cache.put(key, kernel, report)
+                elif op == 1:
+                    cache.get(key)
+                elif op == 2:
+                    assert len(cache) >= 0
+                elif op == 3:
+                    _ = cache.stats.summary, cache.stats.hit_rate
+                else:
+                    cache.clear()
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+            stop.set()
+
+    threads = [threading.Thread(target=hammer, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+
+
+def test_concurrent_stats_invariant_hits_plus_misses_is_lookups():
+    """Without clear() in the mix, hits + misses must equal the exact
+    number of lookups issued, and the eviction-adjusted entry count
+    must match — counters may never tear or drop under concurrency."""
+    kernel = _kernel()
+    cache = CompileCache(max_entries=4)
+    keys = [_key(kernel, tag=f"s{i}") for i in range(8)]
+    report = _report()
+    lookups_per_thread = 200
+    n_threads = 8
+    errors = []
+
+    def hammer(tid):
+        try:
+            for i in range(lookups_per_thread):
+                key = keys[(tid * 3 + i) % len(keys)]
+                if (tid + i) % 3 == 0:
+                    cache.put(key, kernel, report)
+                cache.get(key)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    stats = cache.stats.snapshot()
+    assert stats.hits + stats.misses == n_threads * lookups_per_thread
+    assert len(cache) <= 4
+
+
+def test_stats_snapshot_is_plain_and_consistent():
+    cache = CompileCache()
+    kernel = _kernel()
+    cache.put(_key(kernel), kernel, _report())
+    cache.get(_key(kernel))
+    snap = cache.stats.snapshot()
+    assert snap._lock is None, "snapshots are plain value objects"
+    assert dataclasses.replace(snap).hits == snap.hits == 1
+    assert "hits 1" in cache.stats.summary
+    assert cache.stats.to_dict()["hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# two-process sharing (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+_CHILD = """
+import json, sys
+from repro.core.driver import Compiler
+from repro.core.frontend.kernelgen import get_bench
+with Compiler(cache_dir=sys.argv[1]) as cc:
+    res = cc.compile(get_bench("vecadd"))
+    print(json.dumps({
+        "cached": res.cached,
+        "ptx": res.ptx,
+        "pass_times": cc.pass_times,
+        "stats": cc.cache_stats.to_dict(),
+    }))
+"""
+
+
+def _spawn(cache_dir):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _CHILD, str(cache_dir)],
+                         capture_output=True, text=True, env=env,
+                         timeout=300)
+    assert out.returncode == 0, out.stderr
+    return json.loads(out.stdout)
+
+
+def test_two_processes_share_cache_dir_zero_reemulation(tmp_path):
+    """Two Compiler sessions in separate processes sharing one
+    cache_dir: the second must serve from disk with zero symbolic
+    emulations and byte-identical PTX."""
+    first = _spawn(tmp_path)
+    assert not first["cached"]
+    assert first["pass_times"].get("emulate-flows", 0) > 0, \
+        "cold process must actually emulate"
+    second = _spawn(tmp_path)
+    assert second["cached"], "second process must be served from disk"
+    assert second["stats"]["disk_hits"] == 1
+    assert second["stats"]["disk_misses"] == 0
+    assert "emulate-flows" not in second["pass_times"], \
+        "a disk-served compile re-ran symbolic emulation"
+    assert second["ptx"] == first["ptx"], "cross-process byte-identity"
+
+
+def test_rejected_cache_dir_combinations(tmp_path):
+    with pytest.raises(ValueError, match="cache_dir"):
+        Compiler(cache_dir=str(tmp_path), share_global_cache=True)
+    with pytest.raises(ValueError, match="cache_dir"):
+        Compiler(cache_dir=str(tmp_path), cache=CompileCache())
+
+
+# ---------------------------------------------------------------------------
+# CompileResult JSON wire form
+# ---------------------------------------------------------------------------
+
+def test_compile_result_json_roundtrip():
+    cc = Compiler()
+    res = cc.compile(get_bench("jacobi"))
+    wire = json.loads(json.dumps(res.to_json_dict()))
+    back = CompileResult.from_json_dict(wire)
+    assert back.ptx == res.ptx, "PTX must survive the wire byte-identical"
+    assert back.n_shuffles == res.n_shuffles == 6
+    assert back.by_kernel["jacobi"].detection.n_loads == 9
+    assert [k.name for k in back.module.kernels] == ["jacobi"]
+    assert back.options.max_delta == res.options.max_delta
+    assert back.frontend == "kernelgen"
+    assert len(back.diagnostics) == len(res.diagnostics)
+    assert back.cache_stats.misses == res.cache_stats.misses
+    # pass_times aggregates from the reports survive too
+    assert set(back.pass_times) == set(res.pass_times)
+
+
+def test_compile_result_json_schema_guard():
+    cc = Compiler()
+    wire = cc.compile(get_bench("vecadd")).to_json_dict()
+    wire["schema"] = 999
+    with pytest.raises(ValueError, match="schema"):
+        CompileResult.from_json_dict(wire)

@@ -1,0 +1,193 @@
+"""HTTP serving front-end tests: endpoint contract, byte-identity of
+served PTX with in-process compilation, error reporting, and the
+bench-list parsing regression (whitespace / trailing commas / unknown
+names)."""
+
+import json
+from http.client import HTTPConnection
+
+import pytest
+
+from repro.core.driver import Compiler
+from repro.core.frontend.kernelgen import get_bench
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.ptx import print_kernel
+from repro.launch.ptx_service import (
+    PtxServiceClient,
+    PtxServiceServer,
+    parse_bench_list,
+)
+
+
+@pytest.fixture(scope="module")
+def server(tmp_path_factory):
+    srv = PtxServiceServer(port=0, jobs=2,
+                           cache_dir=str(tmp_path_factory.mktemp("cache")))
+    srv.start()
+    yield srv
+    srv.close()
+
+
+@pytest.fixture(scope="module")
+def client(server):
+    return PtxServiceClient(server.host, server.port)
+
+
+def _vecadd_ptx():
+    return print_kernel(lower_to_ptx(get_bench("vecadd").program))
+
+
+# ---------------------------------------------------------------------------
+# bench-list parsing (the satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_parse_bench_list_tolerates_whitespace_and_trailing_commas():
+    assert parse_bench_list("jacobi, laplacian,") == ["jacobi", "laplacian"]
+    assert parse_bench_list("  vecadd ") == ["vecadd"]
+    assert parse_bench_list("jacobi,,gradient") == ["jacobi", "gradient"]
+
+
+def test_parse_bench_list_names_unknown_and_valid_set():
+    with pytest.raises(ValueError, match=r"unknown bench\(es\) nope.*jacobi"):
+        parse_bench_list("jacobi, nope")
+    with pytest.raises(ValueError, match="no benchmark names"):
+        parse_bench_list(" ,, ")
+
+
+def test_cli_rejects_bad_bench_list_with_clear_message(capsys):
+    from repro.launch import ptx_service
+    with pytest.raises(SystemExit):
+        ptx_service.main(["--requests", "1", "--benches", "jacobi,nope"])
+    err = capsys.readouterr().err
+    assert "unknown bench(es) nope" in err and "vecadd" in err
+
+
+# ---------------------------------------------------------------------------
+# endpoints
+# ---------------------------------------------------------------------------
+
+def test_healthz(client):
+    assert client.healthz() is True
+
+
+def test_close_without_start_does_not_hang():
+    """shutdown() waits on an event only serve_forever() sets; closing
+    a never-started server must return promptly, not deadlock."""
+    with PtxServiceServer():
+        pass                    # __exit__ closes an unstarted server
+    srv = PtxServiceServer()
+    srv.close()
+
+
+def test_compile_ptx_byte_identical_to_in_process(client):
+    text = _vecadd_ptx()
+    resp = client.compile(ptx=text)
+    local = Compiler().compile(text)
+    assert resp["ptx"] == local.ptx, \
+        "HTTP-served PTX must be byte-identical to Compiler.compile"
+    assert resp["reports"][0]["name"] == "vecadd"
+    assert resp["frontend"] == "ptx"
+
+
+def test_compile_bench_with_options_and_result_rebuild(client):
+    res = client.compile_result(bench="jacobi", max_delta=31)
+    assert res.n_shuffles == 6
+    assert res.by_kernel["jacobi"].detection.n_loads == 9
+    local = Compiler().compile(get_bench("jacobi"))
+    assert res.ptx == local.ptx
+
+
+def test_repeat_requests_served_from_cache(client):
+    client.compile(bench="laplacian")
+    before = client.stats()["cache"]
+    resp = client.compile(bench="laplacian")
+    after = client.stats()["cache"]
+    assert resp["reports"][0]["cached"]
+    assert after["hits"] == before["hits"] + 1
+
+
+def test_stats_endpoint_shape(client):
+    client.compile(bench="vecadd")
+    st = client.stats()
+    assert st["ok"] and st["requests"] >= 1 and st["uptime_s"] >= 0
+    assert {"hits", "misses", "disk_hits", "disk_misses",
+            "hit_rate"} <= set(st["cache"])
+    assert st["disk"] is not None and st["disk"]["entries"] >= 1
+    assert isinstance(st["pass_times"], dict)
+
+
+# ---------------------------------------------------------------------------
+# error contract
+# ---------------------------------------------------------------------------
+
+def _raw_post(server, path, body: bytes, content_length=None):
+    conn = HTTPConnection(server.host, server.port, timeout=60)
+    try:
+        headers = {"Content-Type": "application/json"}
+        if content_length is not None:
+            headers["Content-Length"] = str(content_length)
+        conn.request("POST", path, body=body, headers=headers)
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read() or b"{}")
+    finally:
+        conn.close()
+
+
+def test_unknown_bench_is_400_naming_valid_set(client):
+    with pytest.raises(RuntimeError, match="400.*unknown bench.*vecadd"):
+        client.compile(bench="nope")
+
+
+def test_bad_requests_are_4xx_not_500(server, client):
+    with pytest.raises(RuntimeError, match="400.*exactly one"):
+        client.compile()                                # neither ptx nor bench
+    with pytest.raises(RuntimeError, match="400"):
+        client._request("POST", "/compile",
+                        {"ptx": "x", "bench": "jacobi"})  # both
+    with pytest.raises(RuntimeError, match=r"400.*unknown option\(s\)"):
+        client.compile(bench="jacobi", jobs=3)          # session knob
+    status, payload = _raw_post(server, "/compile", b"{not json")
+    assert status == 400 and "not JSON" in payload["error"]
+    with pytest.raises(RuntimeError, match="400"):
+        client.compile(ptx="this is not ptx at all")
+
+
+def test_unknown_paths_are_404(server, client):
+    with pytest.raises(RuntimeError, match="404"):
+        client._request("GET", "/nope")
+    status, _ = _raw_post(server, "/nope", b"{}")
+    assert status == 404
+
+
+def test_errors_counted_but_service_stays_up(client):
+    before = client.stats()["errors"]
+    with pytest.raises(RuntimeError):
+        client.compile(bench="nope")
+    st = client.stats()
+    assert st["errors"] == before + 1
+    assert client.healthz(), "an error response must not take the service down"
+
+
+# ---------------------------------------------------------------------------
+# modes
+# ---------------------------------------------------------------------------
+
+def test_bench_mode_end_to_end(tmp_path, capsys):
+    from repro.launch import ptx_service
+    summary = ptx_service.main([
+        "--bench", "--requests", "8", "--clients", "2",
+        "--benches", "vecadd, divergence,",
+        "--cache-dir", str(tmp_path)])
+    assert summary["requests"] == 8
+    assert summary["distinct_benches"] == 2
+    assert summary["req_per_s"] > 0
+    assert "ptx_service bench OK" in capsys.readouterr().out
+
+    # the same dir warm: a second in-process "replica" run must verify
+    # the zero-emulation disk path end to end
+    summary2 = ptx_service.main([
+        "--requests", "6", "--jobs", "2",
+        "--benches", "vecadd,divergence",
+        "--cache-dir", str(tmp_path), "--expect-warm-disk"])
+    assert "emulate-flows" not in summary2["pass_times"]
+    assert "warm-from-disk verified" in capsys.readouterr().out

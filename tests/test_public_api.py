@@ -13,6 +13,7 @@ DRIVER_API = {
     "Compiler",
     "CompilerOptions",
     "CompileResult",
+    "DetectionSummary",
     "Diagnostic",
     "NormalizedSource",
     "Severity",
@@ -33,6 +34,7 @@ PASSES_API = {
     "CacheStats",
     "CompileCache",
     "DEFAULT_PASSES",
+    "DiskCache",
     "GLOBAL_CACHE",
     "KernelContext",
     "KernelReport",
