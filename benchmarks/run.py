@@ -11,6 +11,12 @@
 
 Output: ``name,value,unit,derived`` CSV lines.
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only E1,E5]
+
+Snapshot mode (perf trajectory; see :mod:`benchmarks.snapshot`):
+
+  python -m benchmarks.run --snapshot                  # write BENCH_PR6.json
+  python -m benchmarks.run --snapshot /tmp/now.json \
+                           --check BENCH_PR6.json      # CI perf smoke
 """
 
 from __future__ import annotations
@@ -27,7 +33,28 @@ def main() -> None:
     ap.add_argument("--jobs", type=int, default=None,
                     help="worker threads for per-kernel module compiles "
                          "(default: one per kernel, capped at CPU count)")
+    ap.add_argument("--snapshot", nargs="?", const=None, default=False,
+                    metavar="PATH",
+                    help="write a schema-stamped perf snapshot (default "
+                         "path BENCH_PR6.json) instead of running suites")
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="with --snapshot: compare against a committed "
+                         "baseline JSON; counters exact, timings loose")
+    ap.add_argument("--time-tolerance", type=float, default=0.25,
+                    help="allowed relative wall-time regression for "
+                         "--check after machine calibration (default .25)")
+    ap.add_argument("--no-serving", action="store_true",
+                    help="with --snapshot: skip the E9 serving phase")
     args = ap.parse_args()
+    if args.snapshot is not False:
+        from .snapshot import DEFAULT_PATH, run_snapshot
+        print("name,value,unit,derived")
+        ok = run_snapshot(args.snapshot or DEFAULT_PATH,
+                          check_path=args.check,
+                          time_tolerance=args.time_tolerance,
+                          serving=not args.no_serving)
+        print(f"ALL.ok,{int(ok)},bool,", flush=True)
+        sys.exit(0 if ok else 1)
     from .common import session
     compiler = session(jobs=args.jobs)   # one driver session for all suites
     from . import (calibrate, fig2_cycle_model, pallas_traffic, roofline,

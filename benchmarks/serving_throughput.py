@@ -30,13 +30,20 @@ REQUESTS = 24
 CLIENTS = 4
 
 
-def run() -> bool:
+def measure() -> dict:
+    """Run the three phases and return their raw numbers.
+
+    Shared by :func:`run` (CSV emission + pass/fail) and the benchmark
+    snapshot writer (``benchmarks.run --snapshot``), which records the
+    throughputs as the E9 point of the perf trajectory.
+    """
     from repro.launch.ptx_service import (
         PtxServiceClient,
         PtxServiceServer,
         drive_requests as _drive,
     )
 
+    out: dict = {"requests": REQUESTS, "clients": CLIENTS}
     ok = True
     plan = [BENCH_MIX[i % len(BENCH_MIX)] for i in range(REQUESTS)]
     with tempfile.TemporaryDirectory(prefix="ptx-serving-") as cache_dir:
@@ -46,16 +53,12 @@ def run() -> bool:
             ok &= client.healthz()
 
             cold_s = _drive(client, plan, CLIENTS)
-            emit("serving.cold.req_per_s", REQUESTS / cold_s, "req/s",
-                 f"{REQUESTS} reqs, {CLIENTS} clients, empty cache")
+            out["cold_req_per_s"] = REQUESTS / cold_s
             warm_s = _drive(client, plan, CLIENTS)
-            emit("serving.warm.req_per_s", REQUESTS / warm_s, "req/s",
-                 "same mix, session memory tier")
+            out["warm_req_per_s"] = REQUESTS / warm_s
             stats = client.stats()
-            emit("serving.memory.hit_rate", stats["cache"]["hit_rate"],
-                 "ratio", "across cold+warm phases")
-            emit("serving.disk.entries", stats["disk"]["entries"], "count",
-                 "persisted compile results")
+            out["memory_hit_rate"] = stats["cache"]["hit_rate"]
+            out["disk_entries"] = stats["disk"]["entries"]
             ok &= stats["requests"] == 2 * REQUESTS
             ok &= stats["disk"]["entries"] >= len(set(plan))
             # warm phase must be pure hits: no new emulation after cold
@@ -67,18 +70,35 @@ def run() -> bool:
             replica.start()
             client = PtxServiceClient(replica.host, replica.port)
             replica_s = _drive(client, plan, CLIENTS)
-            emit("serving.replica.req_per_s", REQUESTS / replica_s, "req/s",
-                 "fresh session, shared cache_dir")
+            out["replica_req_per_s"] = REQUESTS / replica_s
             stats = client.stats()
-            emit("serving.replica.disk_hits", stats["cache"]["disk_hits"],
-                 "count", "served warm from the shared disk tier")
-            emulate_s = stats["pass_times"].get("emulate-flows", 0.0)
-            emit("serving.replica.emulate_s", emulate_s, "s",
-                 "MUST be 0: disk hits skip symbolic emulation")
-            ok &= emulate_s == 0.0
+            out["replica_disk_hits"] = stats["cache"]["disk_hits"]
+            out["replica_emulate_s"] = \
+                stats["pass_times"].get("emulate-flows", 0.0)
+            ok &= out["replica_emulate_s"] == 0.0
             ok &= stats["cache"]["disk_hits"] >= len(set(plan))
             ok &= stats["cache"]["disk_misses"] == 0
-    return bool(ok)
+    out["ok"] = bool(ok)
+    return out
+
+
+def run() -> bool:
+    m = measure()
+    emit("serving.cold.req_per_s", m["cold_req_per_s"], "req/s",
+         f"{REQUESTS} reqs, {CLIENTS} clients, empty cache")
+    emit("serving.warm.req_per_s", m["warm_req_per_s"], "req/s",
+         "same mix, session memory tier")
+    emit("serving.memory.hit_rate", m["memory_hit_rate"],
+         "ratio", "across cold+warm phases")
+    emit("serving.disk.entries", m["disk_entries"], "count",
+         "persisted compile results")
+    emit("serving.replica.req_per_s", m["replica_req_per_s"], "req/s",
+         "fresh session, shared cache_dir")
+    emit("serving.replica.disk_hits", m["replica_disk_hits"],
+         "count", "served warm from the shared disk tier")
+    emit("serving.replica.emulate_s", m["replica_emulate_s"], "s",
+         "MUST be 0: disk hits skip symbolic emulation")
+    return m["ok"]
 
 
 if __name__ == "__main__":

@@ -1,0 +1,256 @@
+"""Schema-stamped perf snapshots — the ``BENCH_PR*.json`` trajectory.
+
+``benchmarks.run --snapshot [PATH]`` writes one machine-readable perf
+point per PR so regressions are caught mechanically instead of by
+eyeballing CSV logs:
+
+* **e1_cold** — the headline number: cold-compile wall time of the
+  16-kernel KernelGen suite (serial, uncached), with per-phase pass
+  times and the emulator's own counters (steps, forks, memoization
+  hits, terms interned, ...).
+* **e1_warm** — the same module compiled twice through one session
+  cache: deterministic hit/miss counts plus the warm wall time.
+* **e9_serving** — HTTP service throughput (cold / warm / replica
+  phases) from :mod:`benchmarks.serving_throughput`.
+* **machine_calib_s** — best-of wall time of a fixed pure-Python spin
+  loop, recorded so ``--check`` can rescale a baseline captured on a
+  different machine before applying its tolerance.
+
+``benchmarks.run --snapshot CURRENT --check BASELINE`` then compares:
+
+* counters and detection facts **exactly** — they are deterministic
+  per code version, so any drift is a semantic change, not noise;
+* timings **loosely** — the baseline budget is rescaled by the ratio
+  of the two spin-loop calibrations and must hold within
+  ``--time-tolerance`` (default 0.25, i.e. a >25% E1 regression on
+  equal hardware fails).
+"""
+
+from __future__ import annotations
+
+import json
+import platform
+import sys
+from time import perf_counter
+from typing import List, Optional
+
+SCHEMA = "repro-bench-snapshot"
+SCHEMA_VERSION = 1
+DEFAULT_PATH = "BENCH_PR6.json"
+
+_SPIN_ITERS = 2_000_000
+
+
+def machine_calib_s(repeat: int = 3) -> float:
+    """Best-of wall time of a fixed pure-Python spin loop.
+
+    Emulation cost is single-core interpreter-bound, so it scales with
+    this figure across machines; ``check`` divides the two calibrations
+    to normalize a baseline recorded elsewhere.
+    """
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = perf_counter()
+        s = 0
+        for i in range(_SPIN_ITERS):
+            s += i & 7
+        best = min(best, perf_counter() - t0)
+    return best
+
+
+def _kernelgen_module():
+    from repro.core.frontend.kernelgen import all_benches
+    from repro.core.frontend.stencil import lower_to_ptx
+    from repro.core.ptx import Module
+
+    benches = all_benches()
+    return Module(kernels=[lower_to_ptx(b.program)
+                           for b in benches.values()])
+
+
+def measure_e1_cold(repeat: int = 3) -> dict:
+    """Cold-compile the KernelGen suite: serial, no result cache.
+
+    Counters come from the first run of the process so the intern
+    tables start cold — that makes ``terms_interned`` reproducible; the
+    other counters are per-compile deterministic anyway.  Timings keep
+    the best of ``repeat`` runs (same policy as ``common.timed``).
+    """
+    from repro.core.driver import Compiler
+
+    module = _kernelgen_module()
+    out: dict = {"repeat": repeat}
+    best_wall = float("inf")
+    for i in range(repeat):
+        with Compiler(jobs=0) as cc:
+            t0 = perf_counter()
+            result = cc.compile(module, cache=None)
+            wall = perf_counter() - t0
+        if i == 0:
+            out["counters"] = dict(result.emulator_counters)
+            out["n_kernels"] = len(result.reports)
+            out["n_shuffles"] = result.n_shuffles
+        if wall < best_wall:
+            best_wall = wall
+            pt = result.pass_times
+            out["wall_s"] = wall
+            out["emulate_s"] = pt.get("emulate-flows", 0.0)
+            out["detect_s"] = pt.get("detect-shuffles", 0.0)
+            out["mid_end_s"] = sum(pt.values())
+    return out
+
+
+def measure_e1_warm() -> dict:
+    """Compile the suite twice through one session cache.
+
+    The hit/miss counts are exact invariants (every kernel misses once,
+    hits once); the warm wall time shows what the cache buys.
+    """
+    from repro.core.driver import Compiler
+    from repro.core.passes.cache import CompileCache
+
+    module = _kernelgen_module()
+    # explicit cache= so a REPRO_CACHE_DIR in the environment cannot
+    # attach a pre-populated disk tier and skew the counts
+    with Compiler(jobs=0, cache=CompileCache()) as cc:
+        cc.compile(module)
+        t0 = perf_counter()
+        cc.compile(module)
+        warm_wall = perf_counter() - t0
+        stats = cc.cache_stats
+        return {
+            "wall_s": warm_wall,
+            "cache_hits": stats.hits,
+            "cache_misses": stats.misses,
+            "cache_hit_rate": stats.hit_rate,
+        }
+
+
+def measure_e9() -> dict:
+    from . import serving_throughput
+    m = serving_throughput.measure()
+    return {
+        "cold_req_per_s": m["cold_req_per_s"],
+        "warm_req_per_s": m["warm_req_per_s"],
+        "replica_req_per_s": m["replica_req_per_s"],
+        "replica_emulate_s": m["replica_emulate_s"],
+        "disk_entries": m["disk_entries"],
+        "ok": m["ok"],
+    }
+
+
+def take(serving: bool = True, repeat: int = 3) -> dict:
+    """Measure everything and return the snapshot document."""
+    snap = {
+        "schema": SCHEMA,
+        "schema_version": SCHEMA_VERSION,
+        "python": platform.python_version(),
+        "machine_calib_s": machine_calib_s(),
+        "e1_cold": measure_e1_cold(repeat=repeat),
+        "e1_warm": measure_e1_warm(),
+    }
+    if serving:
+        snap["e9_serving"] = measure_e9()
+    return snap
+
+
+def write(snap: dict, path: str) -> None:
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(snap, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def load(path: str) -> dict:
+    with open(path, "r", encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def check(current: dict, baseline: dict,
+          time_tolerance: float = 0.25) -> List[str]:
+    """Compare ``current`` against ``baseline``; return failure strings.
+
+    Counters / detection facts exact, timings loose (calibration-scaled
+    budget × ``1 + time_tolerance``).  An empty list means pass.
+    """
+    fails: List[str] = []
+    if current.get("schema") != baseline.get("schema"):
+        fails.append(f"schema mismatch: {current.get('schema')!r} vs "
+                     f"baseline {baseline.get('schema')!r}")
+        return fails
+
+    cur_e1, base_e1 = current["e1_cold"], baseline["e1_cold"]
+
+    # --- exact: semantics must not drift -----------------------------
+    for key in ("n_kernels", "n_shuffles"):
+        if cur_e1.get(key) != base_e1.get(key):
+            fails.append(f"e1_cold.{key}: {cur_e1.get(key)} != baseline "
+                         f"{base_e1.get(key)}")
+    base_counters = base_e1.get("counters", {})
+    cur_counters = cur_e1.get("counters", {})
+    for key in sorted(set(base_counters) | set(cur_counters)):
+        if cur_counters.get(key) != base_counters.get(key):
+            fails.append(
+                f"e1_cold.counters.{key}: {cur_counters.get(key)} != "
+                f"baseline {base_counters.get(key)} (counters are "
+                "deterministic — this is a semantic change, not noise)")
+    cur_warm, base_warm = current.get("e1_warm"), baseline.get("e1_warm")
+    if cur_warm and base_warm:
+        for key in ("cache_hits", "cache_misses"):
+            if cur_warm.get(key) != base_warm.get(key):
+                fails.append(f"e1_warm.{key}: {cur_warm.get(key)} != "
+                             f"baseline {base_warm.get(key)}")
+
+    # --- loose: wall time within a machine-normalized budget ---------
+    cur_calib = current.get("machine_calib_s") or 0.0
+    base_calib = baseline.get("machine_calib_s") or 0.0
+    scale = (cur_calib / base_calib) if base_calib > 0 else 1.0
+    for key in ("wall_s", "mid_end_s"):
+        cur_t, base_t = cur_e1.get(key), base_e1.get(key)
+        if cur_t is None or base_t is None:
+            continue
+        budget = base_t * scale * (1.0 + time_tolerance)
+        if cur_t > budget:
+            fails.append(
+                f"e1_cold.{key}: {cur_t:.3f}s exceeds budget "
+                f"{budget:.3f}s (baseline {base_t:.3f}s x calib ratio "
+                f"{scale:.2f} x tolerance {1 + time_tolerance:.2f})")
+    return fails
+
+
+def run_snapshot(path: str, check_path: Optional[str] = None,
+                 time_tolerance: float = 0.25,
+                 serving: bool = True) -> bool:
+    """Entry point used by ``benchmarks.run --snapshot``."""
+    from .common import emit
+
+    snap = take(serving=serving)
+    write(snap, path)
+    e1 = snap["e1_cold"]
+    emit("snapshot.machine_calib", snap["machine_calib_s"], "s",
+         f"spin loop, {_SPIN_ITERS} iters")
+    emit("snapshot.e1_cold.wall", e1["wall_s"], "s",
+         f"{e1['n_kernels']} kernels, serial, uncached")
+    emit("snapshot.e1_cold.emulate", e1["emulate_s"], "s")
+    emit("snapshot.e1_cold.detect", e1["detect_s"], "s")
+    for name, value in sorted(e1["counters"].items()):
+        emit(f"snapshot.e1_cold.counters.{name}", value, "count")
+    emit("snapshot.e1_warm.wall", snap["e1_warm"]["wall_s"], "s",
+         "second compile of the same module, session cache")
+    if "e9_serving" in snap:
+        e9 = snap["e9_serving"]
+        emit("snapshot.e9.cold_req_per_s", e9["cold_req_per_s"], "req/s")
+        emit("snapshot.e9.replica_req_per_s", e9["replica_req_per_s"],
+             "req/s")
+    emit("snapshot.written", path, "path")
+
+    ok = True
+    if check_path is not None:
+        fails = check(snap, load(check_path), time_tolerance=time_tolerance)
+        for f in fails:
+            print(f"snapshot.check.FAIL,{f},,", file=sys.stdout, flush=True)
+        emit("snapshot.check", int(not fails), "bool",
+             f"vs {check_path}, tolerance {time_tolerance}")
+        ok = not fails
+    if "e9_serving" in snap:
+        ok = ok and bool(snap["e9_serving"]["ok"])
+    return ok

@@ -294,6 +294,22 @@ class Compiler:
                 diags.append(Diagnostic(
                     Severity.WARNING, "symbolic emulation found no flows",
                     source="emulate-flows", kernel=rep.name))
+            t_steps = rep.counters.get("truncated_steps", 0)
+            t_forks = rep.counters.get("truncated_forks", 0)
+            if t_steps or t_forks:
+                what = []
+                if t_steps:
+                    what.append(f"max_steps={opts.max_steps} stopped "
+                                f"{t_steps} flow(s)")
+                if t_forks:
+                    what.append(f"max_flows={opts.max_flows} dropped "
+                                f"{t_forks} fork(s)")
+                diags.append(Diagnostic(
+                    Severity.WARNING,
+                    "emulation truncated: " + "; ".join(what) +
+                    " — detection may be incomplete; raise the budget "
+                    "via CompilerOptions",
+                    source="emulate-flows", kernel=rep.name))
         return CompileResult(
             ptx=print_module(out_module),
             module=out_module,

@@ -35,6 +35,13 @@ class CompilerOptions:
     * ``target`` — profile name / ``sm_XX``; ``None`` = registry default
       (or the module's own ``.target`` directive)
     * ``selection`` — candidate policy: ``all`` | ``cost``
+    * ``max_flows`` / ``max_steps`` — symbolic-emulator fork/step budgets;
+      when either truncates emulation the compile carries a ``warning``
+      diagnostic (results from a truncated emulation are incomplete, so
+      the budgets key the cache)
+    * ``prune_flows`` — opt-in detection-aware flow pruning in the
+      emulator (drops forked flows that provably cannot reach a memory
+      or shuffle instruction)
 
     Session knobs (execution policy, never part of the cache key):
 
@@ -63,6 +70,9 @@ class CompilerOptions:
     lane: str = "tid.x"
     target: Optional[str] = None
     selection: str = "all"
+    max_flows: int = 256
+    max_steps: int = 200_000
+    prune_flows: bool = False
 
     jobs: Optional[int] = None
     cache_entries: int = 4096

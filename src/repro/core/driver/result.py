@@ -97,6 +97,16 @@ class CompileResult:
                 total[name] = total.get(name, 0.0) + dt
         return total
 
+    @property
+    def emulator_counters(self) -> Dict[str, int]:
+        """Emulator phase counters summed over kernels (steps, forks,
+        memoization hits, truncations, terms interned)."""
+        total: Dict[str, int] = {}
+        for rep in self.reports:
+            for name, n in rep.counters.items():
+                total[name] = total.get(name, 0) + n
+        return total
+
     def diagnostics_at(self, severity: Severity) -> List[Diagnostic]:
         return [d for d in self.diagnostics if d.severity >= severity]
 
@@ -129,6 +139,7 @@ class CompileResult:
                 "emulate_time_s": rep.emulate_time_s,
                 "total_time_s": rep.total_time_s,
                 "pass_times": dict(rep.pass_times),
+                "counters": dict(rep.counters),
                 "detection": None if d is None else {
                     "n_shuffles": d.n_shuffles,
                     "n_loads": d.n_loads,
@@ -191,6 +202,7 @@ class CompileResult:
                 pass_times=dict(rd.get("pass_times") or {}),
                 cached=rd.get("cached", False),
                 target=rd.get("target"),
+                counters=dict(rd.get("counters") or {}),
             ))
         stats_fields = {f.name for f in dataclasses.fields(CacheStats)}
         stats = CacheStats(**{k: v for k, v in

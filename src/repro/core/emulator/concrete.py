@@ -28,6 +28,7 @@ from ..ptx.ir import (
     Reg,
     TYPE_WIDTH,
 )
+from .decode import Decoded, K_LABEL, decode_kernel
 
 _F_TYPES = {"f32", "f64"}
 
@@ -120,6 +121,10 @@ class ConcreteEmulator:
         kernel.renumber()
         self.kernel = kernel
         self.labels = kernel.labels()
+        #: shared one-shot micro-op decode (same stream the symbolic
+        #: emulator dispatches on); per-thread re-parsing of opcode
+        #: strings was the concrete hot loop's dominant cost
+        self.ops = decode_kernel(kernel, self.labels)
         self.mem = Memory()
         self.params: Dict[str, int] = {}
         self.param_arrays: Dict[str, np.ndarray] = {}
@@ -154,7 +159,7 @@ class ConcreteEmulator:
 
     # ------------------------------------------------------------------
     def _run_warp(self, warp: List[_Thread]) -> None:
-        body = self.kernel.body
+        ops = self.ops
         fuel = 3_000_000
         while True:
             alive = [t for t in warp if t.pc is not None]
@@ -165,22 +170,22 @@ class ConcreteEmulator:
                 raise RuntimeError("warp emulation fuel exhausted")
             cur = min(t.pc for t in alive)
             active = [t for t in alive if t.pc == cur]
-            stmt = body[cur]
-            if isinstance(stmt, Label):
+            d = ops[cur]
+            if d.kind == K_LABEL:
                 for t in active:
                     t.pc = cur + 1
                 continue
-            self._exec_warp_instr(stmt, active, warp)
+            self._exec_warp_instr(d, active, warp)
 
     # ------------------------------------------------------------------
-    def _exec_warp_instr(self, instr: Instr, active: List[_Thread],
+    def _exec_warp_instr(self, d: Decoded, active: List[_Thread],
                          warp: List[_Thread]) -> None:
-        base = instr.base
+        base = d.base
         # resolve per-thread guards
         executing: List[_Thread] = []
         for t in active:
-            if instr.pred is not None:
-                neg, pname = instr.pred
+            if d.pred is not None:
+                neg, pname = d.pred
                 p = t.preds.get(pname, False)
                 if neg:
                     p = not p
@@ -190,7 +195,7 @@ class ConcreteEmulator:
             executing.append(t)
 
         if base == "bra":
-            target = self.labels[instr.operands[0].name]
+            target = d.target
             self.stats.bump("branch", len(active))
             for t in active:
                 t.pc = target if t in executing else t.pc + 1
@@ -205,28 +210,26 @@ class ConcreteEmulator:
             for t in executing:
                 m |= 1 << (warp.index(t) % 32)
             for t in executing:
-                t.regs[instr.operands[0].name] = m
+                t.regs[d.operands[0].name] = m
             self.stats.bump("alu", len(executing))
         elif base == "shfl":
-            self._exec_shfl(instr, executing, warp)
+            self._exec_shfl(d, executing, warp)
         else:
             for t in executing:
-                self._exec_thread(instr, t)
+                self._exec_thread(d, t)
         for t in active:
             if t.pc is not None:
                 t.pc += 1
 
     # ------------------------------------------------------------------
-    def _exec_shfl(self, instr: Instr, executing: List[_Thread],
+    def _exec_shfl(self, d: Decoded, executing: List[_Thread],
                    warp: List[_Thread]) -> None:
-        parts = instr.parts
-        mode = next((p for p in parts[1:]
-                     if p in ("up", "down", "bfly", "idx")), "idx")
-        ops = instr.operands
+        mode = d.mode
+        ops = d.operands
         # sync forms:   d, a, b, c, mask   |  d|p, a, b, c, mask
         # legacy forms: d, a, b, c         |  d|p, a, b, c
-        has_pred = len(ops) == (6 if "sync" in parts else 5)
-        d = ops[0]
+        has_pred = len(ops) == d.plain_ops + 2
+        dst = ops[0]
         pd = ops[1] if has_pred else None
         a_i, b_i = (2, 3) if has_pred else (1, 2)
         lane_of = {id(t): warp.index(t) % 32 for t in executing}
@@ -251,7 +254,7 @@ class ConcreteEmulator:
                 ok = True
             ok = ok and (j in exec_lanes)
             val = srcs[j] if ok else srcs[lane]
-            t.regs[d.name] = val & _mask(32)
+            t.regs[dst.name] = val & _mask(32)
             if pd is not None:
                 t.preds[pd.name] = bool(ok)
 
@@ -281,18 +284,14 @@ class ConcreteEmulator:
         t.regs[op.name] = value & _mask(width)
 
     # ------------------------------------------------------------------
-    def _exec_thread(self, instr: Instr, t: _Thread) -> None:
-        base = instr.base
-        parts = instr.parts
-        tsuf = instr.type_suffix()
-        width = TYPE_WIDTH.get(tsuf, 32)
-        ops = instr.operands
+    def _exec_thread(self, d: Decoded, t: _Thread) -> None:
+        base = d.base
+        tsuf = d.tsuf
+        width = d.width
+        ops = d.operands
 
         if base == "ld":
-            space = "global"
-            for p in parts[1:]:
-                if p in ("param", "global", "shared", "local", "const"):
-                    space = p
+            space = d.space
             ref = ops[1]
             if space == "param":
                 self._wr(t, ops[0], self.params[ref.base], width)
@@ -302,14 +301,11 @@ class ConcreteEmulator:
             val = self.mem.load(addr, width // 8)
             self._wr(t, ops[0], val, width)
             self.stats.bump(f"load_{space}")
-            if instr.pred is not None:
+            if d.pred is not None:
                 self.stats.bump("corner_load")
             return
         if base == "st":
-            space = "global"
-            for p in parts[1:]:
-                if p in ("global", "shared", "local"):
-                    space = p
+            space = d.space
             addr = self._addr(t, ops[0])
             val = self._rd(t, ops[1], width)
             self.mem.store(addr, width // 8, val)
@@ -327,7 +323,7 @@ class ConcreteEmulator:
             self.stats.bump("alu")
             return
         if base == "setp":
-            self._exec_setp(instr, t, parts, tsuf, width)
+            self._exec_setp(d, t, tsuf, width)
             return
         if base == "selp":
             p = t.preds.get(ops[3].name, False)
@@ -340,7 +336,7 @@ class ConcreteEmulator:
             self.stats.bump("alu")
             return
         if base == "cvt":
-            self._exec_cvt(instr, t, parts)
+            self._exec_cvt(d, t)
             return
         if tsuf == "pred" and base in ("and", "or", "xor", "not"):
             if base == "not":
@@ -353,9 +349,9 @@ class ConcreteEmulator:
             self.stats.bump("alu")
             return
         if tsuf in _F_TYPES:
-            self._exec_float(instr, t, base, tsuf, width)
+            self._exec_float(d, t, base, tsuf, width)
             return
-        self._exec_int(instr, t, base, parts, tsuf, width)
+        self._exec_int(d, t, base, tsuf, width)
 
     # ------------------------------------------------------------------
     def _addr(self, t: _Thread, ref: MemRef) -> int:
@@ -365,9 +361,9 @@ class ConcreteEmulator:
             base = t.regs.get(ref.base, 0)
         return (base + ref.offset) & _mask(64)
 
-    def _exec_setp(self, instr: Instr, t: _Thread, parts, tsuf, width) -> None:
-        cmp_op = parts[1]
-        ops = instr.operands
+    def _exec_setp(self, d: Decoded, t: _Thread, tsuf, width) -> None:
+        cmp_op = d.cmp_op
+        ops = d.operands
         a = self._rd(t, ops[1], width)
         b = self._rd(t, ops[2], width)
         self.stats.bump("alu")
@@ -392,11 +388,10 @@ class ConcreteEmulator:
                    "le": va <= vb, "gt": va > vb, "ge": va >= vb}.get(cmp_op, False)
         t.preds[ops[0].name] = bool(res)
 
-    def _exec_cvt(self, instr: Instr, t: _Thread, parts) -> None:
-        types = [p for p in parts[1:] if p in TYPE_WIDTH]
-        to_t, from_t = types[0], types[1]
+    def _exec_cvt(self, d: Decoded, t: _Thread) -> None:
+        to_t, from_t = d.to_t, d.from_t
         wv = TYPE_WIDTH[from_t]
-        v = self._rd(t, instr.operands[1], wv)
+        v = self._rd(t, d.operands[1], wv)
         self.stats.bump("alu")
         if from_t in _F_TYPES:
             f = bits_f32(v) if wv == 32 else bits_f64(v)
@@ -410,13 +405,13 @@ class ConcreteEmulator:
                 out = f32_bits(val) if TYPE_WIDTH[to_t] == 32 else f64_bits(val)
             else:
                 out = val
-        self._wr(t, instr.operands[0], out, TYPE_WIDTH[to_t])
+        self._wr(t, d.operands[0], out, TYPE_WIDTH[to_t])
 
-    def _exec_float(self, instr: Instr, t: _Thread, base, tsuf, width) -> None:
+    def _exec_float(self, d: Decoded, t: _Thread, base, tsuf, width) -> None:
         unpack = bits_f32 if width == 32 else bits_f64
         pack = f32_bits if width == 32 else f64_bits
         ft = np.float32 if width == 32 else np.float64
-        ops = instr.operands
+        ops = d.operands
         args = [unpack(self._rd(t, o, width)) for o in ops[1:]]
         self.stats.bump("falu")
         if base == "add":
@@ -458,11 +453,17 @@ class ConcreteEmulator:
             r = ft(0.0)
         self._wr(t, ops[0], pack(float(r)), width)
 
-    def _exec_int(self, instr: Instr, t: _Thread, base, parts, tsuf, width) -> None:
-        signed = bool(tsuf) and tsuf.startswith("s")
-        wide = "wide" in parts
-        hi = "hi" in parts
-        ops = instr.operands
+    def _exec_int(self, d: Decoded, t: _Thread, base, tsuf, width) -> None:
+        # d.signed/wide/hi are decoded only for K_INT ops; this is also
+        # the fallback path for ops decode classed differently (e.g.
+        # f16 arithmetic), so re-derive the flags there
+        if d.signed is not None:
+            signed, wide, hi = d.signed, d.wide, d.hi
+        else:
+            signed = bool(tsuf) and tsuf.startswith("s")
+            wide = "wide" in d.parts
+            hi = "hi" in d.parts
+        ops = d.operands
         self.stats.bump("alu")
         src_w = width
         dst_w = width * 2 if wide else width

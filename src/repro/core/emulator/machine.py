@@ -9,13 +9,34 @@ the loop-header entry with their initial value clipped out and re-added
 (Section 4.2, induction-variable recognition); flows finish at re-entry to
 iterative blocks, at ``ret``/``exit``, or when a block entry repeats an
 already-seen register environment (memoization).
+
+Performance architecture (PR 6):
+
+* the kernel body is decoded **once** into slotted micro-ops
+  (:mod:`.decode`); the hot loop dispatches on an integer kind and reads
+  precomputed fields instead of re-parsing opcode strings per flow step;
+* flow environments (registers, predicates, trace) are **copy-on-write**:
+  :meth:`_Flow.fork` is O(1) and a forked flow only pays for the entries
+  it actually writes.  Trace *event objects* stay shared across sibling
+  flows exactly like the historical shallow ``list(trace)`` copy, so
+  in-place ``invalidated`` marking keeps its pre-COW semantics;
+* per-flow store epochs replace the O(trace) store scan per load;
+* flow ids, loop-UF ids and bool->term ids are **per-emulator** counters,
+  so every compile of the same kernel produces identical terms regardless
+  of process history;
+* optional detection-aware pruning (``prune_flows``, off by default)
+  drops forked flows whose remaining path cannot reach any memory or
+  shuffle instruction; a stub ``FlowResult`` with
+  ``terminated="pruned"`` preserves flow counts.  This can perturb
+  block-entry memoization for other flows, hence opt-in.
+
+The emulator exposes a :attr:`SymbolicEmulator.counters` dict (steps,
+forks, memoization hits, truncations, terms interned) consumed by the
+``flows`` analysis and the benchmark snapshot writer.
 """
 
 from __future__ import annotations
 
-import itertools
-import struct
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
 from ..ptx.ir import (
@@ -43,63 +64,190 @@ from ..symbolic import (
     bool_or,
     bool_xor,
 )
+from ..symbolic.terms import intern_stats
+from .decode import (
+    CMP_MAP as _CMP_MAP,
+    Decoded,
+    FLOAT_TYPES as _FLOAT_TYPES,
+    INT_TYPES as _INT_TYPES,
+    K_ACTIVEMASK,
+    K_BARRIER,
+    K_BRA,
+    K_CVT,
+    K_CVTA,
+    K_FLOAT,
+    K_INT,
+    K_LABEL,
+    K_LD,
+    K_MOV,
+    K_OTHER,
+    K_PREDLOGIC,
+    K_RET,
+    K_SELP,
+    K_SETP,
+    K_SHFL,
+    K_ST,
+    decode_kernel,
+)
 from .trace import FlowResult, LoadEvent, StoreEvent
 
-_flow_counter = itertools.count()
-_uf_counter = itertools.count(0x1000)
-
-_INT_TYPES = {"b8", "b16", "b32", "b64", "s8", "s16", "s32", "s64",
-              "u8", "u16", "u32", "u64"}
-_FLOAT_TYPES = {"f16", "f32", "f64"}
-_CMP_MAP = {
-    # signed / generic
-    "eq": ("eq", True), "ne": ("ne", True),
-    "lt": ("lt", True), "le": ("le", True),
-    "gt": ("gt", True), "ge": ("ge", True),
-    # unsigned
-    "lo": ("lt", False), "ls": ("le", False),
-    "hi": ("gt", False), "hs": ("ge", False),
-    "ltu": ("lt", False), "leu": ("le", False),
-    "gtu": ("gt", False), "geu": ("ge", False),
-    "equ": ("eq", False), "neu": ("ne", False),
-}
-_ROUND_MODS = {"rn", "rz", "rm", "rp", "ru", "rd", "ftz", "sat", "approx",
-               "full", "lo", "hi", "wide", "nc", "volatile", "relaxed", "sync",
-               "uni", "to", "cta", "gpu", "sys", "aligned"}
+#: default emulation limits (overridable per compile via CompilerOptions)
+DEFAULT_MAX_FLOWS = 256
+DEFAULT_MAX_STEPS = 200_000
 
 
-@dataclass
+class _CowDict:
+    """Copy-on-write string->value map for flow environments.
+
+    ``fork`` marks both sides shared in O(1); the first mutation on
+    either side copies the underlying dict.  Reads never copy.
+    """
+
+    __slots__ = ("_map", "_shared")
+
+    def __init__(self) -> None:
+        self._map: Dict[str, object] = {}
+        self._shared = False
+
+    def fork(self) -> "_CowDict":
+        other = _CowDict.__new__(_CowDict)
+        other._map = self._map
+        other._shared = True
+        self._shared = True
+        return other
+
+    def get(self, key, default=None):
+        return self._map.get(key, default)
+
+    def __contains__(self, key) -> bool:
+        return key in self._map
+
+    def __getitem__(self, key):
+        return self._map[key]
+
+    def __setitem__(self, key, value) -> None:
+        if self._shared:
+            self._map = dict(self._map)
+            self._shared = False
+        self._map[key] = value
+
+    def pop(self, key, default=None):
+        if key in self._map:
+            if self._shared:
+                self._map = dict(self._map)
+                self._shared = False
+            return self._map.pop(key, default)
+        return default
+
+    def items(self):
+        return self._map.items()
+
+    def __len__(self) -> int:
+        return len(self._map)
+
+
+class _CowList:
+    """Copy-on-write event trace.
+
+    Only the list *spine* is copied on append-after-fork; the event
+    objects themselves remain shared between sibling flows (the
+    historical ``list(trace)`` shallow-copy semantics that store
+    invalidation relies on).
+    """
+
+    __slots__ = ("_list", "_shared")
+
+    def __init__(self) -> None:
+        self._list: List[object] = []
+        self._shared = False
+
+    def fork(self) -> "_CowList":
+        other = _CowList.__new__(_CowList)
+        other._list = self._list
+        other._shared = True
+        self._shared = True
+        return other
+
+    def append(self, event) -> None:
+        if self._shared:
+            self._list = list(self._list)
+            self._shared = False
+        self._list.append(event)
+
+    def __len__(self) -> int:
+        return len(self._list)
+
+    def __iter__(self):
+        return iter(self._list)
+
+    def to_list(self) -> List[object]:
+        """The underlying list; safe to hand out because any flow still
+        sharing it will copy the spine before its next append."""
+        return self._list
+
+
 class _Flow:
-    pc: int
-    regs: Dict[str, Term]
-    preds: Dict[str, BoolExpr]
-    assumptions: AssumptionSet
-    trace: List[object]
-    flow_id: int = field(default_factory=lambda: next(_flow_counter))
-    entered_headers: Set[int] = field(default_factory=set)
+    __slots__ = ("pc", "regs", "preds", "assumptions", "trace", "flow_id",
+                 "entered_headers", "store_epochs")
 
-    def fork(self) -> "_Flow":
-        return _Flow(
-            pc=self.pc,
-            regs=dict(self.regs),
-            preds=dict(self.preds),
-            assumptions=self.assumptions.copy(),
-            trace=list(self.trace),
-            entered_headers=set(self.entered_headers),
-        )
+    def __init__(self, pc: int, flow_id: int) -> None:
+        self.pc = pc
+        self.flow_id = flow_id
+        self.regs = _CowDict()
+        self.preds = _CowDict()
+        self.assumptions = AssumptionSet()
+        self.trace = _CowList()
+        self.entered_headers: Set[int] = set()
+        self.store_epochs: Dict[str, int] = {}
+
+    def fork(self, flow_id: int) -> "_Flow":
+        f = _Flow.__new__(_Flow)
+        f.pc = self.pc
+        f.flow_id = flow_id
+        f.regs = self.regs.fork()
+        f.preds = self.preds.fork()
+        f.assumptions = self.assumptions.copy()
+        f.trace = self.trace.fork()
+        f.entered_headers = set(self.entered_headers)
+        f.store_epochs = dict(self.store_epochs)
+        return f
 
 
 class SymbolicEmulator:
     """Emulates one PTX kernel over symbolic inputs."""
 
-    def __init__(self, kernel: Kernel, max_flows: int = 256,
-                 max_steps: int = 200_000) -> None:
+    def __init__(self, kernel: Kernel, max_flows: int = DEFAULT_MAX_FLOWS,
+                 max_steps: int = DEFAULT_MAX_STEPS,
+                 prune_flows: bool = False) -> None:
         self.kernel = kernel
         self.max_flows = max_flows
         self.max_steps = max_steps
+        self.prune_flows = prune_flows
         kernel.renumber()
         self.labels = kernel.labels()
+        self.ops: List[Decoded] = decode_kernel(kernel, self.labels)
         self._analyze_cfg()
+        if prune_flows:
+            self._analyze_reach()
+        # per-emulator id wells (deterministic per compile)
+        self._flow_ids = 0
+        self._uf_ids = 0x1000
+        self._b2i_ids: Dict[BoolExpr, int] = {}
+        self.counters: Dict[str, int] = {
+            "steps": 0, "forks": 0, "flows": 0, "memo_hits": 0,
+            "backedge_exits": 0, "infeasible_flows": 0, "pruned_flows": 0,
+            "truncated_steps": 0, "truncated_forks": 0, "terms_interned": 0,
+        }
+
+    def _next_flow_id(self) -> int:
+        v = self._flow_ids
+        self._flow_ids = v + 1
+        return v
+
+    def _next_uf_id(self) -> int:
+        v = self._uf_ids
+        self._uf_ids = v + 1
+        return v
 
     # ------------------------------------------------------------------
     # static pre-analysis: basic blocks, loop headers, loop-written regs
@@ -130,6 +278,44 @@ class SymbolicEmulator:
                             if isinstance(s, Instr):
                                 written.update(self._dsts(s))
 
+    def _analyze_reach(self) -> None:
+        """Which pcs can still reach a memory/shuffle instruction?
+
+        Conservative forward-successor graph (conditional branches take
+        both edges); used only by detection-aware pruning.
+        """
+        ops = self.ops
+        n = len(ops)
+        succ: List[List[int]] = [[] for _ in range(n)]
+        reach = [False] * n
+        for i, d in enumerate(ops):
+            k = d.kind
+            if k in (K_LD, K_ST, K_SHFL):
+                reach[i] = True
+            if k == K_BRA:
+                if d.target is not None:
+                    succ[i].append(d.target)
+                    if d.pred is not None and i + 1 < n:
+                        succ[i].append(i + 1)
+                elif i + 1 < n:
+                    succ[i].append(i + 1)
+            elif k == K_RET:
+                if d.pred is not None and i + 1 < n:
+                    succ[i].append(i + 1)
+            elif i + 1 < n:
+                succ[i].append(i + 1)
+        changed = True
+        while changed:
+            changed = False
+            for i in range(n - 1, -1, -1):
+                if not reach[i]:
+                    for j in succ[i]:
+                        if reach[j]:
+                            reach[i] = True
+                            changed = True
+                            break
+        self._reach_mem = reach
+
     @staticmethod
     def _dsts(instr: Instr) -> List[str]:
         base = instr.base
@@ -158,13 +344,14 @@ class SymbolicEmulator:
                 if name == "WARP_SZ":
                     return Term.const_(32, width)
                 return Term.sym(name.lstrip("%"), width)
-            if name in flow.regs:
-                t = flow.regs[name]
+            t = flow.regs.get(name)
+            if t is not None:
                 if t.width != width:
                     return t.resize(width, signed=True)
                 return t
-            if name in flow.preds:
-                return self._bool_to_term(flow.preds[name], width)
+            p = flow.preds.get(name)
+            if p is not None:
+                return self._bool_to_term(p, width)
             # parameter referenced directly by name
             ptype = self.kernel.param_type(name)
             if ptype is not None:
@@ -176,19 +363,21 @@ class SymbolicEmulator:
         raise TypeError(f"cannot read operand {op!r}")
 
     def _read_pred(self, flow: _Flow, name: str) -> BoolExpr:
-        if name in flow.preds:
-            return flow.preds[name]
+        expr = flow.preds.get(name)
+        if expr is not None:
+            return expr
         expr = Cmp("ne", Term.uf("predin", (Term.sym(f"undef:{name}", 32),), 32),
                    Term.const_(0, 32))
         flow.preds[name] = expr
         return expr
 
-    @staticmethod
-    def _bool_to_term(expr: BoolExpr, width: int) -> Term:
+    def _bool_to_term(self, expr: BoolExpr, width: int) -> Term:
         if isinstance(expr, BoolConst):
             return Term.const_(1 if expr.value else 0, width)
-        key = Term.const_(abs(hash(expr)) & 0xFFFFFFFF, 32)
-        return Term.uf("b2i", (key,), width)
+        bid = self._b2i_ids.get(expr)
+        if bid is None:
+            bid = self._b2i_ids[expr] = len(self._b2i_ids)
+        return Term.uf("b2i", (Term.const_(bid, 32),), width)
 
     def _write(self, flow: _Flow, op, value: Term) -> None:
         assert isinstance(op, Reg)
@@ -204,24 +393,30 @@ class SymbolicEmulator:
     # main loop
     # ------------------------------------------------------------------
     def run(self) -> List[FlowResult]:
-        init = _Flow(pc=0, regs={}, preds={},
-                     assumptions=AssumptionSet(), trace=[])
+        interned0 = sum(intern_stats().values())
+        ops = self.ops
+        n_ops = len(ops)
+        counters = self.counters
+        init = _Flow(pc=0, flow_id=self._next_flow_id())
         worklist: List[_Flow] = [init]
         results: List[FlowResult] = []
         seen_entries: Set[Tuple[int, frozenset]] = set()
+        max_steps = self.max_steps
         steps = 0
 
         while worklist:
             flow = worklist.pop()
             status = "ret"
-            while flow.pc < len(self.kernel.body):
+            while flow.pc < n_ops:
                 steps += 1
-                if steps > self.max_steps:
+                if steps > max_steps:
                     status = "limit"
+                    counters["truncated_steps"] += 1
                     break
-                stmt = self.kernel.body[flow.pc]
-                if isinstance(stmt, Label):
-                    uid = stmt.uid
+                d = ops[flow.pc]
+                kind = d.kind
+                if kind == K_LABEL:
+                    uid = d.label_uid
                     if uid in self.loop_written:
                         if uid in flow.entered_headers:
                             status = "backedge"
@@ -238,11 +433,10 @@ class SymbolicEmulator:
                     flow.pc += 1
                     continue
 
-                instr = stmt
                 # predicated execution
                 guard: Optional[BoolExpr] = None
-                if instr.pred is not None:
-                    neg, pname = instr.pred
+                if d.pred is not None:
+                    neg, pname = d.pred
                     guard = self._read_pred(flow, pname)
                     if neg:
                         guard = bool_not(guard)
@@ -253,25 +447,46 @@ class SymbolicEmulator:
                     if implied is True:
                         guard = None
 
-                if instr.base == "bra":
-                    next_flows = self._exec_branch(flow, instr, guard)
-                    if next_flows is None:      # pruned / done
+                if kind == K_BRA:
+                    next_flows = self._exec_branch(flow, d, guard)
+                    if next_flows is None:      # both paths contradictory
                         status = "pruned"
+                        counters["infeasible_flows"] += 1
                         break
-                    if len(next_flows) == 2 and len(worklist) + len(results) < self.max_flows:
-                        worklist.append(next_flows[1])
+                    if len(next_flows) == 2:
+                        child = next_flows[1]
+                        if self.prune_flows and not self._reach_mem[child.pc]:
+                            counters["pruned_flows"] += 1
+                            results.append(FlowResult(
+                                flow_id=child.flow_id,
+                                trace=child.trace.to_list(),
+                                assumptions=child.assumptions,
+                                terminated="pruned"))
+                        elif len(worklist) + len(results) < self.max_flows:
+                            worklist.append(child)
+                        else:
+                            counters["truncated_forks"] += 1
                     flow = next_flows[0]
                     continue
-                if instr.base in ("ret", "exit"):
+                if kind == K_RET:
                     status = "ret"
                     break
 
-                self._exec(flow, instr, guard)
+                self._exec(flow, d, guard)
                 flow.pc += 1
 
-            results.append(FlowResult(flow_id=flow.flow_id, trace=flow.trace,
+            results.append(FlowResult(flow_id=flow.flow_id,
+                                      trace=flow.trace.to_list(),
                                       assumptions=flow.assumptions,
                                       terminated=status))
+            if status == "memo":
+                counters["memo_hits"] += 1
+            elif status == "backedge":
+                counters["backedge_exits"] += 1
+
+        counters["steps"] += steps
+        counters["flows"] += len(results)
+        counters["terms_interned"] += sum(intern_stats().values()) - interned0
         return results
 
     # ------------------------------------------------------------------
@@ -285,22 +500,20 @@ class SymbolicEmulator:
         for reg in sorted(self.loop_written.get(header_uid, ())):
             if reg in flow.regs:
                 init = flow.regs[reg]
-                it = Term.uf("loop", (Term.const_(next(_uf_counter), 32),),
+                it = Term.uf("loop", (Term.const_(self._next_uf_id(), 32),),
                              init.width)
                 flow.regs[reg] = init.add(it)
             elif reg in flow.preds:
                 flow.preds[reg] = Cmp(
                     "ne",
-                    Term.uf("loopp", (Term.const_(next(_uf_counter), 32),), 32),
+                    Term.uf("loopp", (Term.const_(self._next_uf_id(), 32),), 32),
                     Term.const_(0, 32),
                 )
 
     # ------------------------------------------------------------------
-    def _exec_branch(self, flow: _Flow, instr: Instr,
+    def _exec_branch(self, flow: _Flow, d: Decoded,
                      guard: Optional[BoolExpr]) -> Optional[List[_Flow]]:
-        target_op = instr.operands[0]
-        assert isinstance(target_op, LabelRef)
-        target = self.labels.get(target_op.name)
+        target = d.target
         if target is None:
             flow.pc += 1
             return [flow]
@@ -308,7 +521,8 @@ class SymbolicEmulator:
             flow.pc = target
             return [flow]
         # fork: taken (assume guard) and fallthrough (assume !guard)
-        taken = flow.fork()
+        taken = flow.fork(self._next_flow_id())
+        self.counters["forks"] += 1
         ok_taken = taken.assumptions.add(guard)
         taken.pc = target
         ok_fall = flow.assumptions.add(bool_not(guard))
@@ -325,29 +539,28 @@ class SymbolicEmulator:
     # ------------------------------------------------------------------
     # instruction semantics
     # ------------------------------------------------------------------
-    def _exec(self, flow: _Flow, instr: Instr, guard: Optional[BoolExpr]) -> None:
-        base = instr.base
-        parts = instr.parts
-        tsuf = instr.type_suffix()
-        width = TYPE_WIDTH.get(tsuf, 32)
+    def _exec(self, flow: _Flow, d: Decoded, guard: Optional[BoolExpr]) -> None:
+        kind = d.kind
+        width = d.width
+        operands = d.operands
 
-        if base == "ld":
-            self._exec_ld(flow, instr, guard, parts, tsuf, width)
-        elif base == "st":
-            self._exec_st(flow, instr, parts, tsuf, width)
-        elif base == "mov":
-            if tsuf == "pred":
-                src = instr.operands[1]
-                self._write_pred(flow, instr.operands[0],
+        if kind == K_LD:
+            self._exec_ld(flow, d, guard)
+        elif kind == K_ST:
+            self._exec_st(flow, d)
+        elif kind == K_MOV:
+            if d.tsuf == "pred":
+                src = operands[1]
+                self._write_pred(flow, operands[0],
                                  self._read_pred(flow, src.name)
                                  if isinstance(src, Reg) else TRUE)
             else:
-                val = self._read(flow, instr.operands[1], width)
-                self._store_result(flow, instr.operands[0], val, guard)
-        elif base == "setp":
-            self._exec_setp(flow, instr, parts, tsuf, width)
-        elif base == "selp":
-            d, a, b, p = instr.operands
+                val = self._read(flow, operands[1], width)
+                self._store_result(flow, operands[0], val, guard)
+        elif kind == K_SETP:
+            self._exec_setp(flow, d)
+        elif kind == K_SELP:
+            dst, a, b, p = operands
             cond = self._read_pred(flow, p.name)
             implied = flow.assumptions.implied(cond)
             if implied is True:
@@ -358,71 +571,63 @@ class SymbolicEmulator:
                 val = Term.uf("ite", (self._bool_to_term(cond, 32),
                                       self._read(flow, a, width),
                                       self._read(flow, b, width)), width)
-            self._store_result(flow, d, val, guard)
-        elif base in ("cvta",):
-            val = self._read(flow, instr.operands[1], width)
-            self._store_result(flow, instr.operands[0], val, guard)
-        elif base == "cvt":
-            self._exec_cvt(flow, instr, parts, guard)
-        elif base in ("and", "or", "xor", "not") and tsuf == "pred":
-            ops = instr.operands
+            self._store_result(flow, dst, val, guard)
+        elif kind == K_CVTA:
+            val = self._read(flow, operands[1], width)
+            self._store_result(flow, operands[0], val, guard)
+        elif kind == K_CVT:
+            self._exec_cvt(flow, d, guard)
+        elif kind == K_PREDLOGIC:
+            base = d.base
             if base == "not":
-                e = bool_not(self._read_pred(flow, ops[1].name))
+                e = bool_not(self._read_pred(flow, operands[1].name))
             else:
-                a = self._read_pred(flow, ops[1].name)
-                b = self._read_pred(flow, ops[2].name)
+                a = self._read_pred(flow, operands[1].name)
+                b = self._read_pred(flow, operands[2].name)
                 e = {"and": bool_and, "or": bool_or, "xor": bool_xor}[base](a, b)
-            self._write_pred(flow, ops[0], e)
-        elif tsuf in _FLOAT_TYPES and base in (
-                "add", "sub", "mul", "div", "fma", "mad", "neg", "abs",
-                "min", "max", "sqrt", "rsqrt", "rcp", "sin", "cos", "lg2",
-                "ex2", "tanh", "copysign"):
-            args = tuple(self._read(flow, o, width) for o in instr.operands[1:])
-            if base in ("add", "mul", "min", "max") and len(args) == 2:
+            self._write_pred(flow, operands[0], e)
+        elif kind == K_FLOAT:
+            args = tuple(self._read(flow, o, width) for o in operands[1:])
+            if d.commutative and len(args) == 2:
                 ka = (args[0].const, tuple(sorted(x.uid for x in args[0].coeffs)))
                 kb = (args[1].const, tuple(sorted(x.uid for x in args[1].coeffs)))
                 if kb < ka:
                     args = (args[1], args[0])
-            val = Term.uf(f"f{base}.{tsuf}", args, width)
-            self._store_result(flow, instr.operands[0], val, guard)
-        elif base in ("add", "sub", "mul", "mad", "div", "rem", "min", "max",
-                      "neg", "abs", "shl", "shr", "and", "or", "xor", "not",
-                      "popc", "clz", "brev", "bfind"):
-            self._exec_int(flow, instr, parts, tsuf, width, guard)
-        elif base == "shfl":
-            d = instr.operands[0]
-            rest = instr.operands[1:]
+            val = Term.uf(d.fname, args, width)
+            self._store_result(flow, operands[0], val, guard)
+        elif kind == K_INT:
+            self._exec_int(flow, d, guard)
+        elif kind == K_SHFL:
+            dst = operands[0]
+            rest = operands[1:]
             pred_dst = None
             # sync forms carry a trailing membermask operand; legacy
             # (pre-sm_70) forms do not
-            plain_ops = 4 if "sync" in parts else 3
-            if len(rest) > plain_ops:  # %d|%p form parsed into two regs
+            if len(rest) > d.plain_ops:  # %d|%p form parsed into two regs
                 pred_dst, rest = rest[0], rest[1:]
-            mode = next((p for p in parts[1:]
-                         if p in ("up", "down", "bfly", "idx")), "idx")
             args = tuple(self._read(flow, o, 32) for o in rest[:2])
-            val = Term.uf(f"shfl.{mode}",
-                          args + (Term.const_(next(_uf_counter), 32),), 32)
-            self._store_result(flow, d, val, guard)
+            val = Term.uf(f"shfl.{d.mode}",
+                          args + (Term.const_(self._next_uf_id(), 32),), 32)
+            self._store_result(flow, dst, val, guard)
             if pred_dst is not None and isinstance(pred_dst, Reg) \
                     and self.kernel.reg_type(pred_dst.name) == "pred":
                 self._write_pred(flow, pred_dst, Cmp(
                     "ne", Term.uf("shflp", (val,), 32), Term.const_(0, 32)))
-        elif base == "activemask":
-            val = Term.uf("activemask", (Term.const_(instr.uid, 32),), 32)
-            self._store_result(flow, instr.operands[0], val, guard)
-        elif base in ("bar", "membar", "fence"):
+        elif kind == K_ACTIVEMASK:
+            val = Term.uf("activemask", (Term.const_(d.uid, 32),), 32)
+            self._store_result(flow, operands[0], val, guard)
+        elif kind == K_BARRIER:
             pass
         else:
             # unknown op: opaque result if it has a register destination
-            if instr.operands and isinstance(instr.operands[0], Reg):
+            if operands and isinstance(operands[0], Reg):
                 args = tuple(self._read(flow, o, width)
-                             for o in instr.operands[1:]
+                             for o in operands[1:]
                              if isinstance(o, (Reg, Imm)))
                 self._store_result(
-                    flow, instr.operands[0],
-                    Term.uf(instr.opcode, args +
-                            (Term.const_(next(_uf_counter), 32),), width),
+                    flow, operands[0],
+                    Term.uf(d.instr.opcode, args +
+                            (Term.const_(self._next_uf_id(), 32),), width),
                     guard)
 
     # ------------------------------------------------------------------
@@ -445,16 +650,16 @@ class SymbolicEmulator:
             t = self._read(flow, Reg(base), 64)
         if t.width != 64:
             t = t.resize(64, signed=False)
+        if ref.offset == 0:
+            return t
         return t.add(Term.const_(ref.offset, 64))
 
-    def _exec_ld(self, flow: _Flow, instr: Instr, guard: Optional[BoolExpr],
-                 parts, tsuf, width) -> None:
-        space = "global"
-        for p in parts[1:]:
-            if p in ("param", "global", "shared", "local", "const"):
-                space = p
-        nc = "nc" in parts
-        dst, ref = instr.operands[0], instr.operands[1]
+    def _exec_ld(self, flow: _Flow, d: Decoded,
+                 guard: Optional[BoolExpr]) -> None:
+        space = d.space
+        nc = d.nc
+        width = d.width
+        dst, ref = d.operands[0], d.operands[1]
         assert isinstance(ref, MemRef)
         if space == "param":
             val = Term.sym(f"param:{ref.base}", width)
@@ -462,76 +667,69 @@ class SymbolicEmulator:
             return
         addr = self._mem_addr(flow, ref)
         # load value: UF over (address, store-epoch) for non-.nc loads
-        epoch = sum(1 for e in flow.trace if isinstance(e, StoreEvent)
-                    and e.space == space)
-        args = (addr,) if nc else (addr, Term.const_(epoch, 32))
-        val = Term.uf(f"load.{space}.{tsuf}", args, width)
+        if nc:
+            args = (addr,)
+        else:
+            epoch = flow.store_epochs.get(space, 0)
+            args = (addr, Term.const_(epoch, 32))
+        val = Term.uf(f"load.{space}.{d.tsuf}", args, width)
         event = LoadEvent(
-            stmt_uid=instr.uid, space=space, nc=nc, addr=addr, width=width,
-            value=val, block=self.block_of[instr.uid], order=len(flow.trace),
+            stmt_uid=d.uid, space=space, nc=nc, addr=addr, width=width,
+            value=val, block=self.block_of[d.uid], order=len(flow.trace),
             guarded=guard is not None,
         )
         flow.trace.append(event)
         self._store_result(flow, dst, val, guard)
 
-    def _exec_st(self, flow: _Flow, instr: Instr, parts, tsuf, width) -> None:
-        space = "global"
-        for p in parts[1:]:
-            if p in ("global", "shared", "local"):
-                space = p
-        ref, src = instr.operands[0], instr.operands[1]
+    def _exec_st(self, flow: _Flow, d: Decoded) -> None:
+        space = d.space
+        ref, src = d.operands[0], d.operands[1]
         assert isinstance(ref, MemRef)
         addr = self._mem_addr(flow, ref)
-        val = self._read(flow, src, width)
+        val = self._read(flow, src, d.width)
         from ..symbolic.solver import may_alias
         for e in flow.trace:
             if isinstance(e, LoadEvent) and e.space == space and not e.nc \
                     and may_alias(addr, e.addr):
                 e.invalidated = True
         flow.trace.append(StoreEvent(
-            stmt_uid=instr.uid, space=space, addr=addr, width=width,
-            value=val, block=self.block_of[instr.uid], order=len(flow.trace)))
+            stmt_uid=d.uid, space=space, addr=addr, width=d.width,
+            value=val, block=self.block_of[d.uid], order=len(flow.trace)))
+        flow.store_epochs[space] = flow.store_epochs.get(space, 0) + 1
 
-    def _exec_setp(self, flow: _Flow, instr: Instr, parts, tsuf, width) -> None:
-        cmp_op = parts[1]
-        rel, signed = _CMP_MAP.get(cmp_op, ("eq", True))
-        if tsuf in _INT_TYPES or tsuf is None:
-            if tsuf and tsuf.startswith("u") or tsuf and tsuf.startswith("b"):
-                signed = signed and rel in ("eq", "ne")
-            a = self._read(flow, instr.operands[1], width)
-            b = self._read(flow, instr.operands[2], width)
-            expr: BoolExpr = Cmp(rel, a, b, signed=signed)
+    def _exec_setp(self, flow: _Flow, d: Decoded) -> None:
+        width = d.width
+        operands = d.operands
+        if not d.float_cmp:
+            a = self._read(flow, operands[1], width)
+            b = self._read(flow, operands[2], width)
+            expr: BoolExpr = Cmp(d.rel, a, b, signed=d.cmp_signed)
         else:
             # float compare: opaque (NaN-sound) — UF per comparison
-            a = self._read(flow, instr.operands[1], width)
-            b = self._read(flow, instr.operands[2], width)
-            t = Term.uf(f"fcmp.{cmp_op}.{tsuf}", (a, b), 32)
+            a = self._read(flow, operands[1], width)
+            b = self._read(flow, operands[2], width)
+            t = Term.uf(f"fcmp.{d.cmp_op}.{d.tsuf}", (a, b), 32)
             expr = Cmp("ne", t, Term.const_(0, 32))
         cv = expr.eval_const() if isinstance(expr, Cmp) else None
         if cv is not None:
             expr = TRUE if cv else FALSE
-        self._write_pred(flow, instr.operands[0], expr)
+        self._write_pred(flow, operands[0], expr)
 
-    def _exec_cvt(self, flow: _Flow, instr: Instr, parts, guard) -> None:
-        types = [p for p in parts[1:] if p in TYPE_WIDTH]
-        if len(types) < 2:
-            types = ["b32", "b32"]
-        to_t, from_t = types[0], types[1]
-        src = self._read(flow, instr.operands[1], TYPE_WIDTH[from_t])
+    def _exec_cvt(self, flow: _Flow, d: Decoded, guard) -> None:
+        to_t, from_t = d.to_t, d.from_t
+        src = self._read(flow, d.operands[1], TYPE_WIDTH[from_t])
         if to_t in _FLOAT_TYPES or from_t in _FLOAT_TYPES:
             val = Term.uf(f"cvt.{to_t}.{from_t}", (src,), TYPE_WIDTH[to_t])
         else:
             val = src.resize(TYPE_WIDTH[to_t], signed=from_t.startswith("s"))
-        self._store_result(flow, instr.operands[0], val, guard)
+        self._store_result(flow, d.operands[0], val, guard)
 
-    def _exec_int(self, flow: _Flow, instr: Instr, parts, tsuf, width,
-                  guard) -> None:
-        base = instr.base
-        signed = bool(tsuf) and tsuf.startswith("s")
-        ops = instr.operands
-        wide = "wide" in parts
-        hi = "hi" in parts
-        if base in ("neg", "abs", "not", "popc", "clz", "brev", "bfind"):
+    def _exec_int(self, flow: _Flow, d: Decoded, guard) -> None:
+        base = d.base
+        signed = d.signed
+        ops = d.operands
+        width = d.width
+        if d.unary:
             a = self._read(flow, ops[1], width)
             if base == "neg":
                 val = a.neg()
@@ -549,11 +747,11 @@ class SymbolicEmulator:
         # ``.wide`` ops: the type suffix names the *source* type; the
         # destination is twice as wide (e.g. mul.wide.s32 -> 64-bit dst).
         src_width = width
-        if wide:
+        if d.wide:
             width = width * 2
         a = self._read(flow, ops[1], src_width)
         b = self._read(flow, ops[2], src_width)
-        if wide:
+        if d.wide:
             a = a.resize(width, signed)
             b = b.resize(width, signed)
         if base == "add":
@@ -561,7 +759,7 @@ class SymbolicEmulator:
         elif base == "sub":
             val = a.sub(b)
         elif base == "mul":
-            if hi:
+            if d.hi:
                 val = Term.uf("mulhi", (a, b), width)
             else:
                 val = a.mul(b)
@@ -591,5 +789,14 @@ class SymbolicEmulator:
         self._store_result(flow, ops[0], val, guard)
 
 
-def emulate(kernel: Kernel, **kw) -> List[FlowResult]:
-    return SymbolicEmulator(kernel, **kw).run()
+def emulate(kernel: Kernel, counters: Optional[Dict[str, int]] = None,
+            **kw) -> List[FlowResult]:
+    """One-shot emulation.  When ``counters`` is given, the emulator's
+    phase counters are merged into it (the ``flows`` analysis passes the
+    context's product dict here)."""
+    emu = SymbolicEmulator(kernel, **kw)
+    flows = emu.run()
+    if counters is not None:
+        for key, value in emu.counters.items():
+            counters[key] = counters.get(key, 0) + value
+    return flows

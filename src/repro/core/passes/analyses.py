@@ -132,7 +132,14 @@ def _compute_dominators(ctx: KernelContext) -> Dict[int, Set[int]]:
 
 @register_analysis("flows")
 def _compute_flows(ctx: KernelContext) -> List[FlowResult]:
-    return emulate(ctx.kernel)
+    cfg = ctx.config
+    # counters are published as a product: they are a historical fact
+    # about this run (they survive kernel replacement) and feed the
+    # compile-result observability surface + benchmark snapshots
+    return emulate(ctx.kernel,
+                   counters=ctx.products.setdefault("emulator_counters", {}),
+                   max_flows=cfg.max_flows, max_steps=cfg.max_steps,
+                   prune_flows=cfg.prune_flows)
 
 
 @dataclass

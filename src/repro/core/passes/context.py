@@ -34,13 +34,17 @@ class PipelineConfig:
     lane: str = "tid.x"         # the lane dimension the solver shifts along
     target: Optional[str] = None  # profile name / sm_XX; None = registry default
     selection: str = "all"      # candidate policy: all | cost
+    max_flows: int = 256        # emulator: fork budget before truncation
+    max_steps: int = 200_000    # emulator: step budget before truncation
+    prune_flows: bool = False   # emulator: detection-aware flow pruning
 
     def cache_token(self) -> Tuple:
         # the target participates as its *resolved* profile name so
         # "sm_61", "pascal" and a module-directive resolution all share
         # cache entries
         return (self.mode, self.max_delta, self.lane,
-                resolve_target(self.target).name, self.selection)
+                resolve_target(self.target).name, self.selection,
+                self.max_flows, self.max_steps, self.prune_flows)
 
 
 # ---------------------------------------------------------------------------

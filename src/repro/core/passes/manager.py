@@ -43,6 +43,7 @@ class KernelReport:
     cached: bool = False
     target: Optional[str] = None              # resolved profile name
     selection: Optional[object] = None        # targets.cost.SelectionReport
+    counters: Dict[str, int] = field(default_factory=dict)  # emulator counters
 
     @property
     def summary(self) -> str:
@@ -169,6 +170,7 @@ class PassPipeline:
             pass_times=pass_times,
             target=resolve_target(self.config.target).name,
             selection=ctx.products.get("selection"),
+            counters=dict(ctx.products.get("emulator_counters", {})),
         )
         out = ctx.kernel
         if cache is not None and key is not None:

@@ -235,8 +235,13 @@ def solve_shift(
     cancel (R == R'), equal lane strides (k == k'), and
     ``N = (d0 - s0) / k`` integral.  ``k`` must look like a sane element
     stride (non-zero, multiple of the element size) so that lane-adjacency
-    in the paper's sense holds.  Falls back to a bounded search via
-    substitution for robustness on non-affine (UF-containing) strides.
+    in the paper's sense holds.  The fallback covers the remaining cases
+    (e.g. strides hidden inside UF atoms) — since terms are affine over
+    interned atoms, substituting ``lane -> lane + N`` only shifts the
+    constant by ``k*N``, so the historical bounded substitution search is
+    equivalent to scanning ``k*N == d0 - s0  (mod 2**w)`` over candidate
+    ``N`` once the coefficient maps agree, which is what runs here (same
+    answers, no term allocation — this is the detection hot path).
     """
     w = src_addr.width
     if dst_addr.width != w:
@@ -252,15 +257,21 @@ def solve_shift(
                 if -max_delta <= n <= max_delta:
                     return n
             return None
-    # bounded fallback (covers e.g. strides hidden inside UF atoms)
-    lane_term = Term.atom(lane, w)
+    # fallback: src(lane+N) == dst  <=>  coeffs equal (incl. the lane
+    # stride, possibly zero) and  s0 + k*N == d0 (mod 2**w); N == 0 means
+    # plain equality.  Scanned in ascending N exactly like the historical
+    # substitution search so tie-breaking is unchanged.
+    if src_addr.coeffs != dst_addr.coeffs:
+        return None
+    mask = (1 << w) - 1
+    ks = src_addr.coeffs.get(lane, 0)
+    diffc = (dst_addr.const - src_addr.const) & mask
     for n in range(-max_delta, max_delta + 1):
         if n == 0:
-            if src_addr == dst_addr:
+            if diffc == 0:
                 return 0
             continue
-        shifted = src_addr.subst_atom(lane, lane_term.add(Term.const_(n, w)))
-        if shifted == dst_addr:
+        if (ks * n - diffc) & mask == 0:
             return n
     return None
 
@@ -269,11 +280,12 @@ def may_alias(addr_a: Term, addr_b: Term) -> bool:
     """Conservative may-alias test used for store invalidation (Sec. 4.3).
 
     Two affine addresses definitely differ when their difference is a
-    non-zero constant; otherwise they may alias.
+    non-zero constant; otherwise they may alias.  (The difference is
+    constant exactly when the coefficient maps agree, so this compares
+    them directly instead of materializing the difference term.)
     """
     if addr_a.width != addr_b.width:
         return True
-    diff = addr_a.sub(addr_b)
-    if diff.is_const:
-        return diff.const == 0
+    if addr_a.coeffs == addr_b.coeffs:
+        return addr_a.const == addr_b.const
     return True

@@ -29,12 +29,29 @@ _atom_counter = itertools.count()
 # guards the Sym/UF intern tables: module compilation fans kernels out
 # over threads (repro.core.passes), and a check-then-insert race would
 # mint two distinct atoms for one key, silently breaking the
-# "same address -> same value" identity that detection relies on
+# "same address -> same value" identity that detection relies on.
+# Reads stay lock-free (a plain dict.get under the GIL); only the
+# insert path takes the lock.
 _intern_lock = threading.Lock()
+
+#: common PTX widths, precomputed (``_mask`` stays for odd widths)
+_MASKS = {1: 0x1, 8: 0xFF, 16: 0xFFFF, 32: 0xFFFFFFFF,
+          64: 0xFFFFFFFFFFFFFFFF}
 
 
 def _mask(width: int) -> int:
-    return (1 << width) - 1
+    m = _MASKS.get(width)
+    return m if m is not None else (1 << width) - 1
+
+
+def intern_stats() -> Dict[str, int]:
+    """Sizes of the process-wide intern tables (observability gauge)."""
+    return {
+        "syms": len(Sym._interned),
+        "ufs": len(UF._interned),
+        "const_terms": len(_CONST_CACHE),
+        "atom_terms": len(_ATOM_CACHE),
+    }
 
 
 def to_signed(value: int, width: int) -> int:
@@ -121,13 +138,32 @@ class UF(Atom):
         return f"{self.fn}({', '.join(map(repr, self.args))})"
 
 
+#: hash-cons caches for the two hottest term shapes.  Reads are lock-free
+#: dict gets; concurrent inserts may race but produce equal values, so
+#: last-write-wins is harmless.
+_CONST_CACHE: Dict[Tuple[int, int], "Term"] = {}
+_ATOM_CACHE: Dict[Tuple[int, int], "Term"] = {}
+_TLS = threading.local()
+
+
 class Term:
-    """Immutable affine combination of atoms, modulo 2**width."""
+    """Immutable affine combination of atoms, modulo 2**width.
+
+    Terms are value-immutable and their ``coeffs`` dict is never mutated
+    after construction, so internal fast paths (:meth:`_make`) share
+    coefficient dicts between terms instead of copying, and frequently
+    recreated shapes — constants and single-atom terms — are hash-consed
+    through lock-free read caches (:data:`_CONST_CACHE`,
+    :data:`_ATOM_CACHE`; racing inserts are idempotent because the
+    cached values compare equal).
+    """
 
     __slots__ = ("width", "const", "coeffs", "_hash")
 
     def __init__(self, width: int, const: int, coeffs: Optional[Dict[Atom, int]] = None):
-        m = _mask(width)
+        m = _MASKS.get(width)
+        if m is None:
+            m = (1 << width) - 1
         self.width = width
         self.const = const & m
         clean: Dict[Atom, int] = {}
@@ -139,18 +175,53 @@ class Term:
         self.coeffs = clean
         self._hash = None
 
+    @classmethod
+    def _make(cls, width: int, const: int, coeffs: Dict[Atom, int]) -> "Term":
+        """Fast internal constructor: ``const`` already masked, ``coeffs``
+        already clean (masked, zero-free) and safe to share, not copy."""
+        t = cls.__new__(cls)
+        t.width = width
+        t.const = const
+        t.coeffs = coeffs
+        t._hash = None
+        return t
+
     # -- constructors ------------------------------------------------------
     @staticmethod
     def const_(value: int, width: int = 32) -> "Term":
-        return Term(width, value)
+        key = (value, width)
+        t = _CONST_CACHE.get(key)
+        if t is None:
+            t = Term(width, value)
+            if -1024 <= value <= 4096:      # bound the hot-constant cache
+                _CONST_CACHE[key] = t
+        return t
 
     @staticmethod
     def atom(a: Atom, width: int = 32) -> "Term":
-        return Term(width, 0, {a: 1})
+        key = (a.uid, width)
+        t = _ATOM_CACHE.get(key)
+        if t is None:
+            t = Term._make(width, 0, {a: 1})
+            _ATOM_CACHE[key] = t
+        return t
 
     @staticmethod
     def sym(name: str, width: int = 32) -> "Term":
-        return Term.atom(Sym(name, width), width)
+        """Named-symbol term, memoized per thread.
+
+        ``%tid.x``/param reads dominate operand decoding, so each thread
+        keeps a private front cache: reads never contend with the intern
+        lock or other threads' inserts.
+        """
+        cache = getattr(_TLS, "syms", None)
+        if cache is None:
+            cache = _TLS.syms = {}
+        key = (name, width)
+        t = cache.get(key)
+        if t is None:
+            t = cache[key] = Term.atom(Sym(name, width), width)
+        return t
 
     @staticmethod
     def uf(fn: str, args: Tuple["Term", ...], width: int = 32) -> "Term":
@@ -174,19 +245,53 @@ class Term:
 
     # -- arithmetic --------------------------------------------------------
     def add(self, other: "Term") -> "Term":
-        coeffs = dict(self.coeffs)
+        w = self.width
+        m = _MASKS.get(w) or ((1 << w) - 1)
+        if not other.coeffs:                # x + const: share the coeff map
+            if not other.const:
+                return self
+            return Term._make(w, (self.const + other.const) & m, self.coeffs)
+        if not self.coeffs:                 # const + x
+            if not self.const:
+                return other
+            return Term._make(w, (self.const + other.const) & m, other.coeffs)
+        coeffs: Dict[Atom, int] = dict(self.coeffs)
         for atom, c in other.coeffs.items():
-            coeffs[atom] = coeffs.get(atom, 0) + c
-        return Term(self.width, self.const + other.const, coeffs)
+            nc = (coeffs.get(atom, 0) + c) & m
+            if nc:
+                coeffs[atom] = nc
+            else:
+                coeffs.pop(atom, None)
+        return Term._make(w, (self.const + other.const) & m, coeffs)
 
     def neg(self) -> "Term":
-        return Term(self.width, -self.const, {a: -c for a, c in self.coeffs.items()})
+        w = self.width
+        m = _MASKS.get(w) or ((1 << w) - 1)
+        return Term._make(w, -self.const & m,
+                          {a: -c & m for a, c in self.coeffs.items()})
 
     def sub(self, other: "Term") -> "Term":
+        w = self.width
+        m = _MASKS.get(w) or ((1 << w) - 1)
+        if not other.coeffs:                # x - const: share the coeff map
+            if not other.const:
+                return self
+            return Term._make(w, (self.const - other.const) & m, self.coeffs)
         return self.add(other.neg())
 
     def mul_const(self, k: int) -> "Term":
-        return Term(self.width, self.const * k, {a: c * k for a, c in self.coeffs.items()})
+        if k == 1:
+            return self
+        w = self.width
+        m = _MASKS.get(w) or ((1 << w) - 1)
+        if not (k & m):
+            return Term.const_(0, w)
+        coeffs: Dict[Atom, int] = {}
+        for a, c in self.coeffs.items():
+            nc = (c * k) & m
+            if nc:
+                coeffs[a] = nc
+        return Term._make(w, (self.const * k) & m, coeffs)
 
     def mul(self, other: "Term") -> "Term":
         if other.is_const:
@@ -289,8 +394,11 @@ class Term:
         """
         if self.is_const:
             v = to_signed(self.const, self.width) if signed else self.const
-            return Term(width, v)
-        return Term(width, self.const, dict(self.coeffs))
+            return Term.const_(v, width) if v >= 0 else Term(width, v)
+        if width >= self.width:
+            # widening keeps every masked value valid: share the map
+            return Term._make(width, self.const, self.coeffs)
+        return Term(width, self.const, self.coeffs)
 
     # -- substitution (used by bounded delta search) ------------------------
     def subst_atom(self, atom: Atom, repl: "Term") -> "Term":

@@ -1,0 +1,195 @@
+"""Golden byte-identity for the fast-path emulator (PR 6).
+
+The golden file was captured from the pre-fast-path tree; these tests
+pin the optimized emulator (pre-decoded micro-ops, COW environments,
+cheap interning) to *bit-identical* observables — printed PTX, flow
+event sequences, detection pairs — plus direct semantic checks on the
+COW structures and the opt-in pruning mode.
+"""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from emulator_golden import (
+    BRANCHY_PTX,
+    GOLDEN_PATH,
+    capture_all,
+    capture_kernel,
+)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN_PATH) as fh:
+        return json.load(fh)
+
+
+@pytest.fixture(scope="module")
+def current():
+    # one capture for all parametrized cases; JSON round-trip normalizes
+    # tuples/ints exactly the way the golden file was serialized
+    return json.loads(json.dumps(capture_all()))
+
+
+def test_golden_covers_suite(golden):
+    assert len(golden) == 20
+    assert "branchy" in golden
+    assert sum(k.startswith("kernelgen:") for k in golden) == 16
+
+
+def test_no_new_or_missing_kernels(golden, current):
+    assert sorted(current) == sorted(golden)
+
+
+@pytest.mark.parametrize("which", ["ptx_sha256", "detection", "flows"])
+def test_byte_identity(golden, current, which):
+    for name in sorted(golden):
+        assert current[name][which] == golden[name][which], (
+            f"{name}: {which} drifted from the pre-fast-path emulator")
+
+
+def test_capture_is_deterministic():
+    """Per-emulator id wells: two captures in one process are identical
+    (module-global counters would leak state between them)."""
+    from repro.core.ptx.parser import parse
+
+    kernel = parse(BRANCHY_PTX).kernels[0]
+    first = capture_kernel(kernel)
+    second = capture_kernel(parse(BRANCHY_PTX).kernels[0])
+    assert first == second
+
+
+# ---------------------------------------------------------------------------
+# COW environment semantics
+# ---------------------------------------------------------------------------
+
+def test_cow_dict_fork_isolation():
+    from repro.core.emulator.machine import _CowDict
+
+    d = _CowDict()
+    d["r1"] = 1
+    d["r2"] = 2
+    child = d.fork()
+    child["r1"] = 10          # copy-on-write: parent untouched
+    d["r3"] = 3               # and vice versa
+    assert d["r1"] == 1 and child["r1"] == 10
+    assert "r3" in d and "r3" not in child
+    assert child["r2"] == 2   # unwritten keys still shared/visible
+    child.pop("r2")
+    assert d["r2"] == 2
+
+
+def test_cow_list_spine_copy_shares_events():
+    """The trace COW copies the spine only: event *objects* stay shared
+    so in-place invalidation in one flow is visible to its sibling —
+    the exact pre-PR shallow-copy (``list(trace)``) semantics."""
+    from repro.core.emulator.machine import _CowList
+
+    class Ev:
+        def __init__(self):
+            self.invalidated = False
+
+    shared = Ev()
+    trace = _CowList()
+    trace.append(shared)
+    child = trace.fork()
+    child.append(Ev())        # spine diverges...
+    trace.append(Ev())
+    assert len(trace) == 2 and len(child) == 2
+    assert trace.to_list()[1] is not child.to_list()[1]
+    shared.invalidated = True  # ...but prefix events stay one object
+    assert child.to_list()[0].invalidated
+    assert trace.to_list()[0] is child.to_list()[0]
+
+
+def test_branchy_flow_forks_are_independent():
+    """End-to-end COW stress: the fork-heavy kernel's flows must not
+    bleed register state or trace events into each other."""
+    from repro.core.emulator.machine import emulate
+    from repro.core.ptx.parser import parse
+
+    kernel = parse(BRANCHY_PTX).kernels[0]
+    flows = emulate(kernel)
+    assert len(flows) >= 3           # early-exit, left, right at minimum
+    assert len({fr.flow_id for fr in flows}) == len(flows)
+    # each trace is a plain list the caller owns
+    sigs = {fr.flow_id: [(type(e).__name__, e.stmt_uid, e.order)
+                         for e in fr.trace] for fr in flows}
+    assert len(set(map(tuple, sigs.values()))) > 1
+
+
+# ---------------------------------------------------------------------------
+# detection-aware pruning (opt-in) keeps observables identical here
+# ---------------------------------------------------------------------------
+
+def test_prune_flows_preserves_ptx_and_pairs():
+    from repro.core.driver import Compiler
+    from repro.core.frontend.kernelgen import all_benches
+    from repro.core.frontend.stencil import lower_to_ptx
+    from repro.core.ptx import Module
+
+    module = Module(kernels=[lower_to_ptx(b.program)
+                             for b in all_benches().values()])
+    with Compiler(jobs=0) as base, \
+            Compiler(jobs=0, prune_flows=True) as pruned:
+        r0 = base.compile(module, cache=None)
+        r1 = pruned.compile(module, cache=None)
+    assert r1.ptx == r0.ptx
+    for a, b in zip(r0.reports, r1.reports):
+        assert a.name == b.name
+        pa = sorted((p.dst_uid, p.src_uid, p.delta) for p in a.detection.pairs)
+        pb = sorted((p.dst_uid, p.src_uid, p.delta) for p in b.detection.pairs)
+        assert pa == pb, f"{a.name}: pruning changed detection"
+        assert a.detection.n_flows == b.detection.n_flows
+
+
+# branch fork order: the *taken* flow continues in the main loop and
+# the fallthrough is the forked child, so pruning fires when the
+# fallthrough path cannot reach memory — here it is a bare ``ret``
+PRUNABLE_PTX = """
+.visible .entry prunable(
+    .param .u64 a
+)
+{
+    .reg .pred %p1;
+    .reg .u32 %r<4>;
+    .reg .u64 %rd<4>;
+
+    ld.param.u64 %rd1, [a];
+    mov.u32 %r1, %tid.x;
+    setp.lt.u32 %p1, %r1, 16;
+    @%p1 bra MEM;
+    ret;
+MEM:
+    mul.wide.u32 %rd2, %r1, 4;
+    add.u64 %rd3, %rd1, %rd2;
+    ld.global.u32 %r2, [%rd3];
+    st.global.u32 [%rd3], %r2;
+    ret;
+}
+"""
+
+
+def test_pruned_stub_flows_skipped_by_detection():
+    """A pruned child appears as a stub FlowResult that detection
+    ignores, keeping ``n_flows`` stable."""
+    from repro.core.emulator.machine import emulate
+    from repro.core.ptx.parser import parse
+    from repro.core.synthesis.detect import detect
+
+    kernel = parse(PRUNABLE_PTX).kernels[0]
+    base = emulate(kernel)
+    counters: dict = {}
+    flows = emulate(kernel, counters=counters, prune_flows=True)
+    pruned = [fr for fr in flows if fr.terminated == "pruned"]
+    assert counters["pruned_flows"] == len(pruned) == 1
+    assert len(flows) == len(base)        # stub keeps the flow count
+    d_base = detect(kernel, base)
+    d_pruned = detect(kernel, flows)
+    assert d_pruned.n_flows == d_base.n_flows
+    assert d_pruned.n_loads == d_base.n_loads
+    assert [(p.dst_uid, p.src_uid, p.delta) for p in d_pruned.pairs] \
+        == [(p.dst_uid, p.src_uid, p.delta) for p in d_base.pairs]

@@ -1,0 +1,192 @@
+"""PR 6 observability surface: emulator counters, budget options,
+truncation diagnostics, and the benchmark snapshot writer/checker."""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from emulator_golden import BRANCHY_PTX
+
+from repro.core.driver import Compiler, Severity
+from repro.core.emulator.machine import SymbolicEmulator, emulate
+from repro.core.ptx.parser import parse
+
+
+@pytest.fixture()
+def branchy():
+    return parse(BRANCHY_PTX).kernels[0]
+
+
+# ---------------------------------------------------------------------------
+# counters
+# ---------------------------------------------------------------------------
+
+def test_counters_populated(branchy):
+    emu = SymbolicEmulator(branchy)
+    flows = emu.run()
+    c = emu.counters
+    assert c["steps"] > 0
+    assert c["flows"] == len(flows)
+    assert c["forks"] >= 2                  # two data-dependent branches
+    assert c["backedge_exits"] >= 1         # the LOOP back-edge
+    assert c["terms_interned"] >= 0
+    assert c["truncated_steps"] == 0 and c["truncated_forks"] == 0
+
+
+def test_emulate_counters_out_param_accumulates(branchy):
+    acc: dict = {}
+    emulate(branchy, counters=acc)
+    first_steps = acc["steps"]
+    emulate(branchy, counters=acc)          # second run adds, not replaces
+    assert acc["steps"] == 2 * first_steps
+
+
+def test_counters_reach_compile_result(branchy):
+    from repro.core.ptx.printer import print_kernel
+
+    with Compiler(jobs=0) as cc:
+        result = cc.compile(print_kernel(branchy), cache=None)
+    c = result.emulator_counters
+    assert c["steps"] > 0 and c["flows"] >= 3
+    # per-report too, and through the JSON wire format
+    assert result.reports[0].counters == c
+    wire = json.loads(json.dumps(result.to_json_dict()))
+    from repro.core.driver import CompileResult
+    back = CompileResult.from_json_dict(wire)
+    assert back.emulator_counters == c
+
+
+def test_per_emulator_ids_do_not_leak(branchy):
+    """Two emulators over the same kernel allocate identical flow/UF
+    ids — nothing is module-global anymore."""
+    a = SymbolicEmulator(branchy)
+    fa = a.run()
+    b = SymbolicEmulator(branchy)
+    fb = b.run()
+    assert [fr.flow_id for fr in fa] == [fr.flow_id for fr in fb]
+    assert min(fr.flow_id for fr in fa) == 0
+    assert a.counters == b.counters
+
+
+# ---------------------------------------------------------------------------
+# budgets + truncation diagnostics
+# ---------------------------------------------------------------------------
+
+def test_max_steps_truncates_with_warning(branchy):
+    from repro.core.ptx.printer import print_kernel
+
+    with Compiler(jobs=0, max_steps=5) as cc:
+        result = cc.compile(print_kernel(branchy), cache=None)
+    assert result.emulator_counters["truncated_steps"] >= 1
+    diags = [d for d in result.diagnostics
+             if d.source == "emulate-flows" and "max_steps=5" in d.message]
+    assert diags and diags[0].severity == Severity.WARNING
+
+
+def test_max_flows_drops_forks_with_warning(branchy):
+    from repro.core.ptx.printer import print_kernel
+
+    with Compiler(jobs=0, max_flows=1) as cc:
+        result = cc.compile(print_kernel(branchy), cache=None)
+    assert result.emulator_counters["truncated_forks"] >= 1
+    # budget bounds the pending population; unbounded branchy yields >= 3
+    assert result.emulator_counters["flows"] <= 2
+    diags = [d for d in result.diagnostics
+             if d.source == "emulate-flows" and "max_flows=1" in d.message]
+    assert diags and diags[0].severity == Severity.WARNING
+
+
+def test_default_budgets_do_not_warn(branchy):
+    from repro.core.ptx.printer import print_kernel
+
+    with Compiler(jobs=0) as cc:
+        result = cc.compile(print_kernel(branchy), cache=None)
+    assert not [d for d in result.diagnostics
+                if "emulation truncated" in d.message]
+
+
+def test_budgets_are_part_of_cache_token():
+    from repro.core.passes.context import PipelineConfig
+
+    a = PipelineConfig().cache_token
+    b = PipelineConfig(max_flows=7).cache_token
+    c = PipelineConfig(prune_flows=True).cache_token
+    assert len({a, b, c}) == 3
+
+
+# ---------------------------------------------------------------------------
+# snapshot writer / checker
+# ---------------------------------------------------------------------------
+
+def _mini_snapshot(wall=1.0, calib=0.1, steps=100):
+    return {
+        "schema": "repro-bench-snapshot",
+        "schema_version": 1,
+        "machine_calib_s": calib,
+        "e1_cold": {
+            "wall_s": wall, "mid_end_s": wall * 0.8,
+            "emulate_s": wall * 0.3, "detect_s": wall * 0.1,
+            "n_kernels": 16, "n_shuffles": 35,
+            "counters": {"steps": steps, "forks": 39},
+        },
+        "e1_warm": {"wall_s": wall * 0.5,
+                    "cache_hits": 16, "cache_misses": 16,
+                    "cache_hit_rate": 0.5},
+    }
+
+
+def test_check_passes_on_identical():
+    from benchmarks.snapshot import check
+    assert check(_mini_snapshot(), _mini_snapshot()) == []
+
+
+def test_check_counters_exact():
+    from benchmarks.snapshot import check
+    fails = check(_mini_snapshot(steps=101), _mini_snapshot(steps=100))
+    assert any("counters.steps" in f for f in fails)
+
+
+def test_check_time_budget_scales_with_calibration():
+    from benchmarks.snapshot import check
+    # 1.5x slower wall time fails at 25% tolerance...
+    assert any("wall_s" in f for f in
+               check(_mini_snapshot(wall=1.5), _mini_snapshot(wall=1.0)))
+    # ...unless the machine itself measures 1.5x slower
+    assert check(_mini_snapshot(wall=1.5, calib=0.15),
+                 _mini_snapshot(wall=1.0, calib=0.1)) == []
+    # and a custom tolerance widens the budget
+    assert check(_mini_snapshot(wall=1.5), _mini_snapshot(wall=1.0),
+                 time_tolerance=0.6) == []
+
+
+def test_check_schema_mismatch_fails_fast():
+    from benchmarks.snapshot import check
+    bad = _mini_snapshot()
+    bad["schema"] = "something-else"
+    fails = check(bad, _mini_snapshot())
+    assert len(fails) == 1 and "schema" in fails[0]
+
+
+def test_committed_baseline_is_well_formed():
+    """BENCH_PR6.json in the repo root must parse, carry the schema
+    stamp, and self-check cleanly (timings identical to themselves)."""
+    import os
+    from benchmarks.snapshot import SCHEMA, check, load
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR6.json")
+    snap = load(path)
+    assert snap["schema"] == SCHEMA
+    assert snap["e1_cold"]["n_kernels"] == 16
+    assert snap["e1_cold"]["counters"]["steps"] > 0
+    assert snap["e1_warm"]["cache_hits"] == 16
+    assert check(snap, snap) == []
+
+
+def test_snapshot_write_load_roundtrip(tmp_path):
+    from benchmarks.snapshot import load, write
+    snap = _mini_snapshot()
+    p = str(tmp_path / "snap.json")
+    write(snap, p)
+    assert load(p) == snap
