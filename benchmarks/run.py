@@ -14,9 +14,13 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--only E1,E5]
 
 Snapshot mode (perf trajectory; see :mod:`benchmarks.snapshot`):
 
-  python -m benchmarks.run --snapshot                  # write BENCH_PR6.json
+  python -m benchmarks.run --snapshot                  # write BENCH_PR7.json
   python -m benchmarks.run --snapshot /tmp/now.json \
-                           --check BENCH_PR6.json      # CI perf smoke
+                           --check BENCH_PR7.json      # CI perf smoke
+
+Saturation smoke (the equality-saturation middle-end, PR 7):
+
+  python -m benchmarks.saturation_smoke                # saturate=on suite
 """
 
 from __future__ import annotations
@@ -36,7 +40,7 @@ def main() -> None:
     ap.add_argument("--snapshot", nargs="?", const=None, default=False,
                     metavar="PATH",
                     help="write a schema-stamped perf snapshot (default "
-                         "path BENCH_PR6.json) instead of running suites")
+                         "path BENCH_PR7.json) instead of running suites")
     ap.add_argument("--check", default=None, metavar="BASELINE",
                     help="with --snapshot: compare against a committed "
                          "baseline JSON; counters exact, timings loose")

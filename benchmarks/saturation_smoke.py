@@ -1,0 +1,100 @@
+"""Saturation smoke: KernelGen suite with the middle-end on (PR 7).
+
+The CI gate for the equality-saturation subsystem: compiles all 16
+KernelGen kernels with ``saturate=on`` and asserts the two invariants
+the middle-end promises —
+
+* **zero soundness failures**: every extracted rewrite passed the
+  differential concrete-emulation gate (a failure means a rule or the
+  extractor miscompiled; the driver drops the rewrite, but CI should
+  treat that as a red build, not a silent fallback);
+* **non-negative predicted cycle delta**: extraction is cost-guided,
+  so it must never pick a rewrite its own model says is a regression.
+
+It also exercises the per-target cost profiles: the suite is extracted
+once per GPU generation extreme (``kepler`` with its 4x integer-mul
+penalty vs ``hopper``), and the predicted improvement must be strictly
+positive on at least three kernels for at least one profile.
+
+Usage:  PYTHONPATH=src python -m benchmarks.saturation_smoke
+Output: ``name,value,unit,derived`` CSV lines + ``ALL.ok``.
+"""
+
+from __future__ import annotations
+
+import sys
+from time import perf_counter
+
+from .common import emit
+
+SMOKE_TARGETS = ("kepler", "hopper")
+MIN_IMPROVED_KERNELS = 3
+
+
+def run() -> bool:
+    from repro.core.driver import Compiler, Severity
+    from repro.core.frontend.kernelgen import all_benches
+    from repro.core.frontend.stencil import lower_to_ptx
+    from repro.core.ptx import Module
+
+    module = Module(kernels=[lower_to_ptx(b.program)
+                             for b in all_benches().values()])
+    ok = True
+    best_improved = 0
+    for target in SMOKE_TARGETS:
+        with Compiler(jobs=0, saturate=True, target=target) as cc:
+            t0 = perf_counter()
+            result = cc.compile(module, cache=None)
+            wall = perf_counter() - t0
+        sc = result.saturation_counters
+        failures = sc.get("sat_soundness_failures", 0)
+        delta_milli = sc.get("sat_cycle_delta_milli", 0)
+        improved = sum(
+            1 for rep in result.reports
+            if rep.counters.get("sat_cycle_delta_milli", 0) > 0)
+        regressed = sum(
+            1 for rep in result.reports
+            if rep.counters.get("sat_cycle_delta_milli", 0) < 0)
+        best_improved = max(best_improved, improved)
+
+        emit(f"saturation.{target}.wall", wall, "s",
+             f"{len(result.reports)} kernels, saturate=on, uncached")
+        emit(f"saturation.{target}.rewrites", sc.get("sat_rewrites", 0),
+             "count")
+        emit(f"saturation.{target}.deleted_instrs",
+             sc.get("sat_deleted_instrs", 0), "count")
+        emit(f"saturation.{target}.cycle_delta", delta_milli / 1000.0,
+             "cycles", "summed predicted improvement")
+        emit(f"saturation.{target}.improved_kernels", improved, "count",
+             f"of {len(result.reports)}")
+        emit(f"saturation.{target}.soundness_failures", failures, "count")
+
+        if failures:
+            for d in result.diagnostics_at(Severity.WARNING):
+                emit(f"saturation.{target}.FAIL", d.message)
+            ok = False
+        if delta_milli < 0 or regressed:
+            emit(f"saturation.{target}.FAIL",
+                 f"cost-guided extraction predicted a regression "
+                 f"({regressed} kernel(s), total {delta_milli} milli-cycles)")
+            ok = False
+
+    emit("saturation.best_improved_kernels", best_improved, "count",
+         f"max over {','.join(SMOKE_TARGETS)}; need >= "
+         f"{MIN_IMPROVED_KERNELS}")
+    if best_improved < MIN_IMPROVED_KERNELS:
+        emit("saturation.FAIL",
+             f"only {best_improved} kernel(s) improved under any profile")
+        ok = False
+    return ok
+
+
+def main() -> None:
+    print("name,value,unit,derived")
+    ok = run()
+    print(f"ALL.ok,{int(ok)},bool,", flush=True)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,11 @@ eyeballing CSV logs:
   hits, terms interned, ...).
 * **e1_warm** — the same module compiled twice through one session
   cache: deterministic hit/miss counts plus the warm wall time.
+* **e1_saturate** — the equality-saturation middle-end over the same
+  suite (``saturate=on``): per-suite ``sat_*`` counters (e-classes,
+  rules applied, rewrites, deleted instructions, predicted cycle
+  delta), how many kernels improved, and the zero-soundness-failure
+  invariant the differential gate enforces.
 * **e9_serving** — HTTP service throughput (cold / warm / replica
   phases) from :mod:`benchmarks.serving_throughput`.
 * **machine_calib_s** — best-of wall time of a fixed pure-Python spin
@@ -36,7 +41,7 @@ from typing import List, Optional
 
 SCHEMA = "repro-bench-snapshot"
 SCHEMA_VERSION = 1
-DEFAULT_PATH = "BENCH_PR6.json"
+DEFAULT_PATH = "BENCH_PR7.json"
 
 _SPIN_ITERS = 2_000_000
 
@@ -126,6 +131,36 @@ def measure_e1_warm() -> dict:
         }
 
 
+def measure_e1_saturate() -> dict:
+    """Compile the suite with the saturation middle-end on.
+
+    The ``sat_*`` counters are deterministic per code version (the
+    e-graph, rules, and extractor are all id-ordered), so ``check``
+    compares them exactly; the wall time rides as a loose figure — it
+    includes the differential soundness gate, which concretely emulates
+    every rewritten kernel twice.
+    """
+    from repro.core.driver import Compiler
+
+    module = _kernelgen_module()
+    with Compiler(jobs=0, saturate=True) as cc:
+        t0 = perf_counter()
+        result = cc.compile(module, cache=None)
+        wall = perf_counter() - t0
+    sc = result.saturation_counters
+    improved = sum(
+        1 for rep in result.reports
+        if rep.counters.get("sat_cycle_delta_milli", 0) > 0)
+    return {
+        "wall_s": wall,
+        "n_kernels": len(result.reports),
+        "n_improved": improved,
+        "counters": dict(sc),
+        "soundness_failures": sc.get("sat_soundness_failures", 0),
+        "cycle_delta": sc.get("sat_cycle_delta_milli", 0) / 1000.0,
+    }
+
+
 def measure_e9() -> dict:
     from . import serving_throughput
     m = serving_throughput.measure()
@@ -148,6 +183,7 @@ def take(serving: bool = True, repeat: int = 3) -> dict:
         "machine_calib_s": machine_calib_s(),
         "e1_cold": measure_e1_cold(repeat=repeat),
         "e1_warm": measure_e1_warm(),
+        "e1_saturate": measure_e1_saturate(),
     }
     if serving:
         snap["e9_serving"] = measure_e9()
@@ -193,6 +229,21 @@ def check(current: dict, baseline: dict,
                 f"e1_cold.counters.{key}: {cur_counters.get(key)} != "
                 f"baseline {base_counters.get(key)} (counters are "
                 "deterministic — this is a semantic change, not noise)")
+    cur_sat, base_sat = current.get("e1_saturate"), \
+        baseline.get("e1_saturate")
+    if cur_sat and base_sat:
+        for key in ("n_kernels", "n_improved", "soundness_failures"):
+            if cur_sat.get(key) != base_sat.get(key):
+                fails.append(f"e1_saturate.{key}: {cur_sat.get(key)} != "
+                             f"baseline {base_sat.get(key)}")
+        base_sc = base_sat.get("counters", {})
+        cur_sc = cur_sat.get("counters", {})
+        for key in sorted(set(base_sc) | set(cur_sc)):
+            if cur_sc.get(key) != base_sc.get(key):
+                fails.append(
+                    f"e1_saturate.counters.{key}: {cur_sc.get(key)} != "
+                    f"baseline {base_sc.get(key)} (saturation is "
+                    "deterministic — this is a semantic change)")
     cur_warm, base_warm = current.get("e1_warm"), baseline.get("e1_warm")
     if cur_warm and base_warm:
         for key in ("cache_hits", "cache_misses"):
@@ -236,6 +287,17 @@ def run_snapshot(path: str, check_path: Optional[str] = None,
         emit(f"snapshot.e1_cold.counters.{name}", value, "count")
     emit("snapshot.e1_warm.wall", snap["e1_warm"]["wall_s"], "s",
          "second compile of the same module, session cache")
+    sat = snap["e1_saturate"]
+    emit("snapshot.e1_saturate.wall", sat["wall_s"], "s",
+         "saturate=on, incl. differential soundness gate")
+    emit("snapshot.e1_saturate.n_improved", sat["n_improved"], "count",
+         f"of {sat['n_kernels']} kernels, predicted cycle delta > 0")
+    emit("snapshot.e1_saturate.cycle_delta", sat["cycle_delta"], "cycles",
+         "summed predicted improvement across the suite")
+    emit("snapshot.e1_saturate.soundness_failures",
+         sat["soundness_failures"], "count")
+    for name, value in sorted(sat["counters"].items()):
+        emit(f"snapshot.e1_saturate.counters.{name}", value, "count")
     if "e9_serving" in snap:
         e9 = snap["e9_serving"]
         emit("snapshot.e9.cold_req_per_s", e9["cold_req_per_s"], "req/s")

@@ -25,6 +25,8 @@ from ..passes.context import PipelineConfig
 from ..passes.manager import (
     ANALYSIS_PASSES,
     DEFAULT_PASSES,
+    SATURATED_ANALYSIS_PASSES,
+    SATURATED_DEFAULT_PASSES,
     SYNTHESIS_PASSES,
     PassPipeline,
 )
@@ -119,6 +121,7 @@ class Compiler:
                 max_entries=self.options.cache_entries, disk=disk)
         self._lock = threading.Lock()
         self._pass_times: Dict[str, float] = {}
+        self._counters: Dict[str, int] = {}
         self._n_runs = 0
         self._executor: Optional[concurrent.futures.ThreadPoolExecutor] = None
 
@@ -145,6 +148,14 @@ class Compiler:
         with self._lock:
             return self._n_runs
 
+    @property
+    def counters(self) -> Dict[str, int]:
+        """Per-kernel report counters (emulator + saturation) summed
+        over every *measured* run of this session — the aggregate the
+        serving front-end's ``/stats`` endpoint publishes."""
+        with self._lock:
+            return dict(self._counters)
+
     def _account(self, reports) -> None:
         with self._lock:
             self._n_runs += 1
@@ -157,6 +168,8 @@ class Compiler:
                 for name, dt in rep.pass_times.items():
                     self._pass_times[name] = \
                         self._pass_times.get(name, 0.0) + dt
+                for name, n in rep.counters.items():
+                    self._counters[name] = self._counters.get(name, 0) + n
 
     # ------------------------------------------------------------------
     # pool lifecycle
@@ -275,9 +288,11 @@ class Compiler:
         if opts.passes is not None:
             passes: Sequence[str] = opts.passes
         elif analysis_only:
-            passes = ANALYSIS_PASSES
+            passes = SATURATED_ANALYSIS_PASSES if opts.saturate \
+                else ANALYSIS_PASSES
         else:
-            passes = DEFAULT_PASSES
+            passes = SATURATED_DEFAULT_PASSES if opts.saturate \
+                else DEFAULT_PASSES
         pipeline = PassPipeline(passes=passes, config=opts.pipeline_config())
         out_module, reports = pipeline.run_module(
             ns.module, jobs=self._effective_jobs(opts, len(ns.module.kernels)),
@@ -310,6 +325,14 @@ class Compiler:
                     " — detection may be incomplete; raise the budget "
                     "via CompilerOptions",
                     source="emulate-flows", kernel=rep.name))
+            sat_failures = rep.counters.get("sat_soundness_failures", 0)
+            if sat_failures:
+                diags.append(Diagnostic(
+                    Severity.WARNING,
+                    f"{sat_failures} extracted rewrite(s) failed the "
+                    "differential concrete-emulation soundness gate and "
+                    "were dropped (original kernel body kept)",
+                    source="extract", kernel=rep.name))
         return CompileResult(
             ptx=print_module(out_module),
             module=out_module,
@@ -366,6 +389,28 @@ class Compiler:
         the_cache = self._pick_cache(cache)
         profiles = [resolve_target(t) for t in
                     (targets if targets is not None else target_names())]
+
+        if opts.saturate:
+            # saturation extracts against the target's cost profile, so
+            # there is no target-independent analysis prefix to share:
+            # each target runs the full saturated pipeline (cached
+            # independently — the profile name is in the cache token)
+            def build_saturated(profile: TargetProfile) -> CompileResult:
+                result = self._run(ns, opts.replace(target=profile.name),
+                                   the_cache, list(diags),
+                                   analysis_only=False)
+                result.target_profile = profile
+                return result
+
+            n_sat = opts.jobs if opts.jobs is not None \
+                else min(len(profiles), os.cpu_count() or 1)
+            if len(profiles) <= 1 or n_sat <= 1:
+                sat_results = [build_saturated(p) for p in profiles]
+            else:
+                with concurrent.futures.ThreadPoolExecutor(
+                        max_workers=n_sat) as ex:
+                    sat_results = list(ex.map(build_saturated, profiles))
+            return {r.target_profile.name: r for r in sat_results}
 
         # the prefix dominates wall clock, so it fans out over kernels
         # exactly like a module compile before targets fan out

@@ -42,6 +42,12 @@ class CompilerOptions:
     * ``prune_flows`` — opt-in detection-aware flow pruning in the
       emulator (drops forked flows that provably cannot reach a memory
       or shuffle instruction)
+    * ``saturate`` — opt-in equality-saturation middle-end: the
+      ``saturate``/``extract`` passes run between flow emulation and
+      shuffle detection, rewriting each kernel to the target profile's
+      cheapest equivalent straight-line form (every rewrite is gated by
+      differential concrete emulation; a failed gate keeps the original
+      body and emits a WARNING diagnostic)
 
     Session knobs (execution policy, never part of the cache key):
 
@@ -73,6 +79,7 @@ class CompilerOptions:
     max_flows: int = 256
     max_steps: int = 200_000
     prune_flows: bool = False
+    saturate: bool = False
 
     jobs: Optional[int] = None
     cache_entries: int = 4096

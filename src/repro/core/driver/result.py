@@ -100,11 +100,26 @@ class CompileResult:
     @property
     def emulator_counters(self) -> Dict[str, int]:
         """Emulator phase counters summed over kernels (steps, forks,
-        memoization hits, truncations, terms interned)."""
+        memoization hits, truncations, terms interned).  Saturation
+        counters (``sat_`` prefix) live in :attr:`saturation_counters`."""
         total: Dict[str, int] = {}
         for rep in self.reports:
             for name, n in rep.counters.items():
-                total[name] = total.get(name, 0) + n
+                if not name.startswith("sat_"):
+                    total[name] = total.get(name, 0) + n
+        return total
+
+    @property
+    def saturation_counters(self) -> Dict[str, int]:
+        """Equality-saturation middle-end counters summed over kernels
+        (e-classes/e-nodes built, rules applied, rewrites, deleted
+        instructions, predicted cycle delta in milli-cycles, soundness
+        failures).  Empty when ``saturate`` was off."""
+        total: Dict[str, int] = {}
+        for rep in self.reports:
+            for name, n in rep.counters.items():
+                if name.startswith("sat_"):
+                    total[name] = total.get(name, 0) + n
         return total
 
     def diagnostics_at(self, severity: Severity) -> List[Diagnostic]:

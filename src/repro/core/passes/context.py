@@ -37,6 +37,7 @@ class PipelineConfig:
     max_flows: int = 256        # emulator: fork budget before truncation
     max_steps: int = 200_000    # emulator: step budget before truncation
     prune_flows: bool = False   # emulator: detection-aware flow pruning
+    saturate: bool = False      # equality-saturation middle-end (egraph)
 
     def cache_token(self) -> Tuple:
         # the target participates as its *resolved* profile name so
@@ -44,7 +45,8 @@ class PipelineConfig:
         # cache entries
         return (self.mode, self.max_delta, self.lane,
                 resolve_target(self.target).name, self.selection,
-                self.max_flows, self.max_steps, self.prune_flows)
+                self.max_flows, self.max_steps, self.prune_flows,
+                self.saturate)
 
 
 # ---------------------------------------------------------------------------

@@ -101,6 +101,15 @@ ANALYSIS_PASSES: Tuple[str, ...] = ("emulate-flows", "detect-shuffles")
 SYNTHESIS_PASSES: Tuple[str, ...] = ("select-shuffles", "synthesize-shuffles")
 DEFAULT_PASSES: Tuple[str, ...] = ANALYSIS_PASSES + SYNTHESIS_PASSES
 
+# the equality-saturation middle-end slots between flow emulation and
+# shuffle detection: extraction rewrites the kernel, and detection must
+# see (and re-emulate) the extracted body it will synthesize against
+SATURATION_PASSES: Tuple[str, ...] = ("saturate", "extract")
+SATURATED_ANALYSIS_PASSES: Tuple[str, ...] = \
+    ("emulate-flows",) + SATURATION_PASSES + ("detect-shuffles",)
+SATURATED_DEFAULT_PASSES: Tuple[str, ...] = \
+    SATURATED_ANALYSIS_PASSES + SYNTHESIS_PASSES
+
 _DEFAULT_JOBS: Optional[int] = None
 
 
@@ -170,7 +179,8 @@ class PassPipeline:
             pass_times=pass_times,
             target=resolve_target(self.config.target).name,
             selection=ctx.products.get("selection"),
-            counters=dict(ctx.products.get("emulator_counters", {})),
+            counters={**ctx.products.get("emulator_counters", {}),
+                      **ctx.products.get("saturation_counters", {})},
         )
         out = ctx.kernel
         if cache is not None and key is not None:

@@ -40,6 +40,37 @@ class DetectShuffles:
         ctx.products["detection"] = ctx.get("detection")
 
 
+@register_pass("saturate")
+class Saturate:
+    """Equality saturation over the per-block PTX dataflow (e-graph
+    build, symbolic value-number + cross-flow load CSE, budgeted rule
+    application).  No-op unless ``config.saturate`` — the knob is also
+    folded into the cache token, so saturated and unsaturated results
+    never share cache entries."""
+
+    def run(self, ctx: KernelContext) -> None:
+        if not ctx.config.saturate:
+            return
+        # late import: the egraph package pulls in targets + emulator
+        from ..egraph.saturate import run_saturate
+        run_saturate(ctx)
+
+
+@register_pass("extract")
+class Extract:
+    """Cost-guided extraction from the saturated e-graphs: rebuilds the
+    kernel with the target profile's cheapest representative per value,
+    then gates the whole rewrite behind differential concrete emulation
+    (a failed check keeps the original body and is counted in
+    ``sat_soundness_failures``)."""
+
+    def run(self, ctx: KernelContext) -> None:
+        if not ctx.config.saturate:
+            return
+        from ..egraph.extract import run_extract
+        run_extract(ctx)
+
+
 def _detection(ctx: KernelContext):
     detection = ctx.products.get("detection")
     if detection is None:

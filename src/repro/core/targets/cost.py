@@ -165,3 +165,67 @@ def measured_profit(base_stats, variant_stats,
     profile = resolve_target(target)
     return (estimate_cycles(base_stats, profile).cycles
             - estimate_cycles(variant_stats, profile).cycles)
+
+
+# ---------------------------------------------------------------------------
+# static per-instruction costs (equality-saturation extraction)
+# ---------------------------------------------------------------------------
+
+#: a register-to-register ``mov`` is charged this fraction of an ALU op —
+#: on every modeled generation it is eliminated by renaming more often
+#: than it issues, and pricing it below the cheapest computation is what
+#: lets the extractor prefer "reuse an existing register" over
+#: "recompute" without a special case
+MOV_FACTOR = 0.5
+
+_FLOAT_TYPES = ("f16", "f32", "f64")
+_SLOW_FLOAT = ("div", "sqrt", "rsqrt", "rcp", "sin", "cos", "lg2", "ex2",
+               "tanh")
+_FREE_BASES = ("ret", "exit", "bar", "membar", "fence")
+
+
+def int_mul_factor(profile: TargetProfile) -> float:
+    """Integer multiply/mad throughput penalty relative to simple ALU:
+    pre-Volta chips (sm < 70) quarter-rate the 32-bit IMAD path, newer
+    ones half-rate it — which is why ``x*2^k -> x<<k`` strength
+    reduction pays more on Kepler/Maxwell/Pascal than on Hopper."""
+    return 4.0 if profile.sm < 70 else 2.0
+
+
+def static_instr_cost(profile: TargetProfile, base: str, *,
+                      tsuf: str = None, space: str = None,
+                      nc: bool = False, parts=()) -> float:
+    """Predicted issue+latency cost of one straight-line instruction.
+
+    The same latency terms the shuffle selector uses (`score_pair`):
+    loads amortize their hit latency over the profile's memory-level
+    parallelism, shuffles over the shuffle ILP window, ALU ops cost the
+    profile's issue weights.  This is the extraction objective for the
+    e-graph middle-end — deltas of these costs, not absolute cycles.
+    """
+    lat = profile.latency
+    if base == "ld":
+        if space in ("param", "const"):
+            return profile.alu_cost
+        if space in ("shared", "local"):
+            return lat["sm"] / profile.mlp
+        return lat["l1"] / profile.mlp
+    if base == "st":
+        return profile.alu_cost
+    if base == "shfl":
+        return lat["shfl"] / profile.shfl_hide
+    if base == "bra":
+        return profile.branch_cost
+    if base in _FREE_BASES:
+        return 0.0
+    if base == "mov":
+        return profile.alu_cost * MOV_FACTOR
+    if tsuf in _FLOAT_TYPES or base == "fma":
+        if base in _SLOW_FLOAT:
+            return 4.0 * profile.falu_cost
+        return profile.falu_cost
+    if base in ("mul", "mad"):
+        return profile.alu_cost * int_mul_factor(profile)
+    if base in ("div", "rem"):
+        return profile.alu_cost * 8.0
+    return profile.alu_cost

@@ -284,6 +284,15 @@ class PtxServiceServer:
             },
             "pass_times": {k: round(v, 6)
                            for k, v in cc.pass_times.items()},
+            # session-aggregated per-kernel report counters: the PR 6
+            # emulator counters and the equality-saturation middle-end's
+            # sat_* counters (empty until a saturate=on compile runs)
+            "emulator_counters": {
+                k: v for k, v in cc.counters.items()
+                if not k.startswith("sat_")},
+            "saturation_counters": {
+                k: v for k, v in cc.counters.items()
+                if k.startswith("sat_")},
         }
 
 

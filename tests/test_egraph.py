@@ -1,0 +1,334 @@
+"""E-graph core and rewrite-rule tests (PR 7).
+
+Property tests (hypothesis when installed, skipped via the stub
+otherwise) pin the structural invariants: union-find/congruence
+consistency after arbitrary unions, rebuild idempotence, and rule
+termination under the saturation budgets.  Each property also has a
+seeded deterministic twin so the invariants are exercised even without
+hypothesis, plus targeted unit tests for the individual rewrite rules.
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.egraph import EGraph, ENode, default_rules
+from repro.core.egraph.rules import _fold, _mask
+from repro.core.egraph.saturate import MAX_ITERS, saturate_block
+
+
+def _sym(eg, name, width=32):
+    return eg.add(ENode("sym", width, (), ("in", name)))
+
+
+def _const(eg, value, width=32):
+    return eg.add(ENode("const", width, (), _mask(value, width)))
+
+
+# ---------------------------------------------------------------------------
+# core structure
+# ---------------------------------------------------------------------------
+
+def test_hashcons_dedups():
+    eg = EGraph()
+    a = _sym(eg, "%r1")
+    b = _sym(eg, "%r2")
+    n1 = eg.add(ENode("add", 32, (a, b)))
+    n2 = eg.add(ENode("add", 32, (a, b)))
+    assert n1 == n2
+    assert eg.n_classes == 3
+    # payload and width participate in identity
+    assert eg.add(ENode("add", 64, (a, b))) != n1
+    assert _sym(eg, "%r1") == a
+
+
+def test_union_keeps_smallest_id_as_root():
+    eg = EGraph()
+    a = _sym(eg, "a")
+    b = _sym(eg, "b")
+    assert eg.union(b, a) is True
+    assert eg.find(b) == a
+    assert eg.union(a, b) is False      # already merged
+    assert eg.n_unions == 1
+
+
+def test_congruence_closure_after_union():
+    """union(a, b) must merge f(a) with f(b) after rebuild."""
+    eg = EGraph()
+    a = _sym(eg, "a")
+    b = _sym(eg, "b")
+    fa = eg.add(ENode("not", 32, (a,)))
+    fb = eg.add(ENode("not", 32, (b,)))
+    gfa = eg.add(ENode("neg", 32, (fa,)))
+    gfb = eg.add(ENode("neg", 32, (fb,)))
+    assert fa != fb and gfa != gfb
+    eg.union(a, b)
+    eg.rebuild()
+    assert eg.find(fa) == eg.find(fb)   # one hop
+    assert eg.find(gfa) == eg.find(gfb)  # transitively, via fixpoint
+    eg.check_invariants()
+
+
+def test_rebuild_idempotent():
+    eg = EGraph()
+    a, b, c = (_sym(eg, n) for n in "abc")
+    eg.add(ENode("add", 32, (a, b)))
+    eg.add(ENode("add", 32, (a, c)))
+    eg.union(b, c)
+    assert eg.rebuild() > 0
+    assert eg.rebuild() == 0            # immediately idempotent
+    eg.check_invariants()
+
+
+def test_add_after_union_hits_merged_class():
+    """Hashcons canonicalizes children, so congruence holds for nodes
+    added *after* their children merged, without a rebuild."""
+    eg = EGraph()
+    a = _sym(eg, "a")
+    b = _sym(eg, "b")
+    fa = eg.add(ENode("not", 32, (a,)))
+    eg.union(a, b)
+    fb = eg.add(ENode("not", 32, (b,)))
+    assert eg.find(fa) == eg.find(fb)
+
+
+def test_const_survives_union():
+    eg = EGraph()
+    c = _const(eg, 42)
+    s = _sym(eg, "x")
+    eg.union(c, s)
+    assert eg.const_of(s) == 42
+    assert eg.const_of(c) == 42
+
+
+# ---------------------------------------------------------------------------
+# property: random unions keep the invariants, rebuild is idempotent
+# ---------------------------------------------------------------------------
+
+def _random_graph(rng, n_leaves, n_ops, n_unions):
+    """Grow a random DAG e-graph and perform random unions."""
+    eg = EGraph()
+    cids = [_sym(eg, f"v{i}") for i in range(n_leaves)]
+    cids += [_const(eg, rng.randrange(0, 8)) for _ in range(2)]
+    for _ in range(n_ops):
+        op = rng.choice(["add", "mul", "and", "xor", "not"])
+        if op == "not":
+            ch = (rng.choice(cids),)
+        else:
+            ch = (rng.choice(cids), rng.choice(cids))
+        cids.append(eg.add(ENode(op, 32, ch)))
+    for _ in range(n_unions):
+        eg.union(rng.choice(cids), rng.choice(cids))
+    return eg, cids
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_unions_keep_invariants(seed):
+    rng = random.Random(seed)
+    eg, _ = _random_graph(rng, n_leaves=4, n_ops=20, n_unions=6)
+    eg.rebuild()
+    eg.check_invariants()
+    assert eg.rebuild() == 0
+
+
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+@settings(max_examples=50, deadline=None)
+def test_property_random_unions(seed):
+    rng = random.Random(seed)
+    eg, cids = _random_graph(rng, n_leaves=5, n_ops=30, n_unions=10)
+    eg.rebuild()
+    eg.check_invariants()
+    assert eg.rebuild() == 0
+    # union-find sanity: find is a projection (find(find(x)) == find(x))
+    for cid in cids:
+        assert eg.find(eg.find(cid)) == eg.find(cid)
+
+
+# ---------------------------------------------------------------------------
+# property: saturation terminates under budget and keeps invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_saturation_terminates_under_budget(seed):
+    rng = random.Random(1000 + seed)
+    eg, _ = _random_graph(rng, n_leaves=4, n_ops=25, n_unions=4)
+    counters = saturate_block(eg, default_rules())
+    assert counters["iterations"] <= MAX_ITERS
+    eg.check_invariants()
+    # saturating an already saturated graph is a no-op (unless the
+    # budget cut the first run short)
+    if not counters["budget_hits"]:
+        again = saturate_block(eg, default_rules())
+        assert again["applied"] == 0
+
+
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_property_saturation_terminates(seed):
+    rng = random.Random(seed)
+    eg, _ = _random_graph(rng, n_leaves=4, n_ops=20, n_unions=5)
+    counters = saturate_block(eg, default_rules(), max_iters=6,
+                              max_nodes=2048)
+    assert counters["iterations"] <= 6
+    eg.check_invariants()
+
+
+def test_node_budget_trips():
+    """A tiny node budget must stop rule application and be counted."""
+    eg = EGraph()
+    a = _sym(eg, "a")
+    acc = a
+    for i in range(6):
+        acc = eg.add(ENode("add", 32, (acc, _sym(eg, f"x{i}"))))
+    counters = saturate_block(eg, default_rules(), max_nodes=8)
+    assert counters["budget_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# rewrite rules
+# ---------------------------------------------------------------------------
+
+def _saturated(build):
+    eg = EGraph()
+    out = build(eg)
+    saturate_block(eg, default_rules())
+    return eg, out
+
+
+def test_const_fold_add():
+    eg, cid = _saturated(lambda eg: eg.add(
+        ENode("add", 32, (_const(eg, 3), _const(eg, 4)))))
+    assert eg.const_of(cid) == 7
+
+
+def test_const_fold_masks_to_width():
+    eg, cid = _saturated(lambda eg: eg.add(
+        ENode("add", 16, (_const(eg, 0xFFFF, 16), _const(eg, 1, 16)))))
+    assert eg.const_of(cid) == 0
+
+
+def test_commutativity():
+    def build(eg):
+        a, b = _sym(eg, "a"), _sym(eg, "b")
+        return eg.add(ENode("add", 32, (a, b))), \
+            eg.add(ENode("add", 32, (b, a)))
+    eg, (ab, ba) = _saturated(build)
+    assert eg.find(ab) == eg.find(ba)
+
+
+def test_associativity():
+    def build(eg):
+        a, b, c = (_sym(eg, n) for n in "abc")
+        ab = eg.add(ENode("add", 32, (a, b)))
+        return eg.add(ENode("add", 32, (ab, c))), \
+            eg.add(ENode("add", 32, (a, eg.add(ENode("add", 32, (b, c))))))
+    eg, (left, right) = _saturated(build)
+    assert eg.find(left) == eg.find(right)
+
+
+def test_add_zero_identity():
+    def build(eg):
+        x = _sym(eg, "x")
+        return x, eg.add(ENode("add", 32, (x, _const(eg, 0))))
+    eg, (x, x0) = _saturated(build)
+    assert eg.find(x) == eg.find(x0)
+
+
+def test_mul_zero_absorbs():
+    eg, cid = _saturated(lambda eg: eg.add(
+        ENode("mul", 32, (_sym(eg, "x"), _const(eg, 0)))))
+    assert eg.const_of(cid) == 0
+
+
+def test_sub_self_is_zero():
+    def build(eg):
+        x = _sym(eg, "x")
+        return eg.add(ENode("sub", 32, (x, x)))
+    eg, cid = _saturated(build)
+    assert eg.const_of(cid) == 0
+
+
+def test_mul_pow2_is_shl():
+    def build(eg):
+        x = _sym(eg, "x")
+        return eg.add(ENode("mul", 32, (x, _const(eg, 8)))), \
+            eg.add(ENode("shl", 32, (x, _const(eg, 3))))
+    eg, (mul, shl) = _saturated(build)
+    assert eg.find(mul) == eg.find(shl)
+
+
+def test_div_pow2_is_shr():
+    def build(eg):
+        x = _sym(eg, "x")
+        return eg.add(ENode("div.u", 32, (x, _const(eg, 4)))), \
+            eg.add(ENode("shr.u", 32, (x, _const(eg, 2))))
+    eg, (div, shr) = _saturated(build)
+    assert eg.find(div) == eg.find(shr)
+
+
+def test_rem_pow2_is_and():
+    def build(eg):
+        x = _sym(eg, "x")
+        return eg.add(ENode("rem.u", 32, (x, _const(eg, 32)))), \
+            eg.add(ENode("and", 32, (x, _const(eg, 31))))
+    eg, (rem, mask) = _saturated(build)
+    assert eg.find(rem) == eg.find(mask)
+
+
+def test_mad_fusion_both_directions():
+    def build(eg):
+        x, y, c = (_sym(eg, n) for n in "xyc")
+        mul = eg.add(ENode("mul", 32, (x, y)))
+        return eg.add(ENode("add", 32, (mul, c))), \
+            eg.add(ENode("mad", 32, (x, y, c)))
+    eg, (add, mad) = _saturated(build)
+    assert eg.find(add) == eg.find(mad)
+
+
+def test_float_ops_stay_opaque():
+    """Opaque ``op:`` nodes must never merge with anything by rules."""
+    def build(eg):
+        a, b = _sym(eg, "fa"), _sym(eg, "fb")
+        return eg.add(ENode("op:add.f32", 32, (a, b))), \
+            eg.add(ENode("op:add.f32", 32, (b, a)))
+    eg, (ab, ba) = _saturated(build)
+    assert eg.find(ab) != eg.find(ba)   # no float commutativity
+
+
+# ---------------------------------------------------------------------------
+# property: const folding agrees with masked Python arithmetic
+# ---------------------------------------------------------------------------
+
+_FOLD_OPS = ["add", "sub", "mul", "and", "or", "xor", "shl", "shr.u",
+             "shr.s", "min.u", "max.s"]
+
+
+def _const_fold_case(seed):
+    rng = random.Random(seed)
+    width = rng.choice([16, 32, 64])
+    op = rng.choice(_FOLD_OPS)
+    a = rng.randrange(0, 1 << width)
+    b = rng.randrange(0, width if op.startswith("sh") else 1 << width)
+    eg = EGraph()
+    cid = eg.add(ENode(op, width,
+                       (_const(eg, a, width), _const(eg, b, width))))
+    saturate_block(eg, default_rules())
+    assert eg.const_of(cid) == _mask(_fold(op, width, [a, b]), width)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_const_fold_matches_reference(seed):
+    _const_fold_case(seed)
+
+
+@given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_property_const_fold(seed):
+    _const_fold_case(seed)

@@ -170,17 +170,21 @@ def test_check_schema_mismatch_fails_fast():
 
 
 def test_committed_baseline_is_well_formed():
-    """BENCH_PR6.json in the repo root must parse, carry the schema
+    """BENCH_PR7.json in the repo root must parse, carry the schema
     stamp, and self-check cleanly (timings identical to themselves)."""
     import os
     from benchmarks.snapshot import SCHEMA, check, load
 
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR6.json")
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR7.json")
     snap = load(path)
     assert snap["schema"] == SCHEMA
     assert snap["e1_cold"]["n_kernels"] == 16
     assert snap["e1_cold"]["counters"]["steps"] > 0
     assert snap["e1_warm"]["cache_hits"] == 16
+    sat = snap["e1_saturate"]
+    assert sat["soundness_failures"] == 0
+    assert sat["n_improved"] >= 3
+    assert sat["counters"]["sat_cycle_delta_milli"] > 0
     assert check(snap, snap) == []
 
 
