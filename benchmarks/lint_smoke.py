@@ -1,0 +1,113 @@
+"""Lint smoke: static analyzer end-to-end over CLI and HTTP (PR 8).
+
+The CI gate for the static PTX semantic analyzer, exercising all three
+front doors on one process:
+
+* **library / strict corpora** — every built-in corpus kernel (the 16
+  lowered KernelGen benches + the Section-8.5 applications) must lint
+  with zero WARNING-or-worse findings: a finding here is a regression
+  in either the lowering or the analyzer;
+* **adversarial corpus** — each planted-bug kernel in
+  ``tests/lint_corpus/`` must trip at least one finding of its planted
+  code (a clean buggy kernel means a detector went blind);
+* **service** — ``POST /lint`` must agree with the library on a clean
+  bench and on a buggy kernel, and ``GET /stats`` must fold the
+  per-finding counters into ``lint_counters``.
+
+Usage:  PYTHONPATH=src python -m benchmarks.lint_smoke
+Output: ``name,value,unit,derived`` CSV lines + ``ALL.ok``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from time import perf_counter
+
+from .common import emit
+
+_CORPUS_DIR = os.path.join(os.path.dirname(__file__), "..",
+                           "tests", "lint_corpus")
+
+
+def run() -> bool:
+    from repro.core.analysis.lint import corpus_kernels, lint_kernel, \
+        lint_source
+    from repro.core.driver import Severity
+    from repro.launch.ptx_service import PtxServiceClient, PtxServiceServer
+
+    ok = True
+
+    # 1. built-in corpora must be strict-clean
+    t0 = perf_counter()
+    n_kernels = 0
+    worst = 0
+    for name, kernel in corpus_kernels("all"):
+        findings = lint_kernel(kernel, kernel_name=name)
+        n_kernels += 1
+        for f in findings:
+            if f.severity >= Severity.WARNING:
+                emit("lint.corpus.FAIL",
+                     f"{name}: {f.code} ({f.severity.name}) {f.message}")
+                ok = False
+            worst = max(worst, int(f.severity))
+    emit("lint.corpus.wall", perf_counter() - t0, "s",
+         f"{n_kernels} kernels, strict threshold")
+    emit("lint.corpus.n_kernels", n_kernels, "count")
+    emit("lint.corpus.clean", int(ok), "bool",
+         "zero WARNING-or-worse findings")
+
+    # 2. every adversarial kernel must trip its planted bug
+    tripped = 0
+    files = sorted(f for f in os.listdir(_CORPUS_DIR)
+                   if f.endswith(".ptx") and f != "shared_synced.ptx")
+    for fname in files:
+        with open(os.path.join(_CORPUS_DIR, fname), encoding="utf-8") as fh:
+            findings = lint_source(fh.read())
+        coded = [f for f in findings if f.severity >= Severity.WARNING]
+        if coded:
+            tripped += 1
+        else:
+            emit("lint.adversarial.FAIL",
+                 f"{fname}: planted bug not detected")
+            ok = False
+    emit("lint.adversarial.tripped", tripped, "count",
+         f"of {len(files)} planted-bug kernels")
+
+    # 3. service e2e: POST /lint + /stats counters
+    with open(os.path.join(_CORPUS_DIR, "div_shfl.ptx"),
+              encoding="utf-8") as fh:
+        buggy_ptx = fh.read()
+    with PtxServiceServer(port=0, jobs=0) as server:
+        server.start()
+        client = PtxServiceClient(server.host, server.port)
+        clean = client.lint(bench="vecadd")
+        if not (clean["clean"] and not clean["findings"]):
+            emit("lint.service.FAIL", "clean bench reported findings")
+            ok = False
+        buggy = client.lint(ptx=buggy_ptx)
+        codes = {f["code"] for f in buggy["findings"]}
+        if buggy["clean"] or "divergent-shfl" not in codes:
+            emit("lint.service.FAIL",
+                 f"divergent-shfl not reported over buggy PTX ({codes})")
+            ok = False
+        counters = client.stats().get("lint_counters", {})
+        if counters.get("lint_divergent_shfl", 0) < 1:
+            emit("lint.service.FAIL",
+                 f"/stats lint_counters missing finding counts ({counters})")
+            ok = False
+        emit("lint.service.requests", client.stats()["requests"], "count")
+    emit("lint.service.ok", int(ok), "bool",
+         "POST /lint clean+buggy, /stats lint_counters")
+    return ok
+
+
+def main() -> None:
+    print("name,value,unit,derived")
+    ok = run()
+    print(f"ALL.ok,{int(ok)},bool,", flush=True)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

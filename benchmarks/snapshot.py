@@ -15,6 +15,11 @@ eyeballing CSV logs:
   rules applied, rewrites, deleted instructions, predicted cycle
   delta), how many kernels improved, and the zero-soundness-failure
   invariant the differential gate enforces.
+* **e1_lint** — the same suite compiled with ``lint="warn"``: total
+  wall time, the ``verify-ptx`` pass's own time (the analyzer must
+  cost < 10% of the cold compile), and the finding count — pinned at
+  zero: the golden corpus is clean, so any finding is a regression in
+  either the corpus or the analyzer.
 * **e9_serving** — HTTP service throughput (cold / warm / replica
   phases) from :mod:`benchmarks.serving_throughput`.
 * **machine_calib_s** — best-of wall time of a fixed pure-Python spin
@@ -41,7 +46,7 @@ from typing import List, Optional
 
 SCHEMA = "repro-bench-snapshot"
 SCHEMA_VERSION = 1
-DEFAULT_PATH = "BENCH_PR7.json"
+DEFAULT_PATH = "BENCH_PR8.json"
 
 _SPIN_ITERS = 2_000_000
 
@@ -161,6 +166,37 @@ def measure_e1_saturate() -> dict:
     }
 
 
+def measure_e1_lint(repeat: int = 3) -> dict:
+    """Compile the suite with the ``verify-ptx`` analyzer on.
+
+    ``n_findings`` is pinned at 0 (the lowered KernelGen suite is
+    clean); ``lint_s`` is the analyzer's own pass time, which the
+    committed baseline asserts stays under 10% of the cold wall.  Both
+    walls are best-of-``repeat``, mirroring ``measure_e1_cold`` so the
+    budget compares like against like.
+    """
+    from repro.core.driver import Compiler
+
+    module = _kernelgen_module()
+    best_wall = best_lint = float("inf")
+    result = None
+    for _ in range(repeat):
+        with Compiler(jobs=0, lint="warn") as cc:
+            t0 = perf_counter()
+            result = cc.compile(module, cache=None)
+            wall = perf_counter() - t0
+        best_wall = min(best_wall, wall)
+        best_lint = min(best_lint,
+                        result.pass_times.get("verify-ptx", 0.0))
+    return {
+        "wall_s": best_wall,
+        "lint_s": best_lint,
+        "n_kernels": len(result.reports),
+        "n_findings": len(result.findings),
+        "counters": dict(result.lint_counters),
+    }
+
+
 def measure_e9() -> dict:
     from . import serving_throughput
     m = serving_throughput.measure()
@@ -184,6 +220,7 @@ def take(serving: bool = True, repeat: int = 3) -> dict:
         "e1_cold": measure_e1_cold(repeat=repeat),
         "e1_warm": measure_e1_warm(),
         "e1_saturate": measure_e1_saturate(),
+        "e1_lint": measure_e1_lint(),
     }
     if serving:
         snap["e9_serving"] = measure_e9()
@@ -244,6 +281,29 @@ def check(current: dict, baseline: dict,
                     f"e1_saturate.counters.{key}: {cur_sc.get(key)} != "
                     f"baseline {base_sc.get(key)} (saturation is "
                     "deterministic — this is a semantic change)")
+    cur_lint, base_lint = current.get("e1_lint"), baseline.get("e1_lint")
+    if cur_lint and base_lint:
+        for key in ("n_kernels", "n_findings"):
+            if cur_lint.get(key) != base_lint.get(key):
+                fails.append(f"e1_lint.{key}: {cur_lint.get(key)} != "
+                             f"baseline {base_lint.get(key)}")
+        base_lc = base_lint.get("counters", {})
+        cur_lc = cur_lint.get("counters", {})
+        for key in sorted(set(base_lc) | set(cur_lc)):
+            if cur_lc.get(key) != base_lc.get(key):
+                fails.append(
+                    f"e1_lint.counters.{key}: {cur_lc.get(key)} != "
+                    f"baseline {base_lc.get(key)} (the analyzer is "
+                    "deterministic — this is a semantic change)")
+    if cur_lint:
+        # overhead bound on the *current* machine: the analyzer must
+        # stay a rounding error next to symbolic emulation
+        lint_s = cur_lint.get("lint_s", 0.0)
+        wall_budget = 0.10 * cur_e1.get("wall_s", 0.0)
+        if wall_budget > 0 and lint_s > wall_budget:
+            fails.append(
+                f"e1_lint.lint_s: verify-ptx took {lint_s:.3f}s, over "
+                f"10% of the cold E1 wall ({wall_budget:.3f}s budget)")
     cur_warm, base_warm = current.get("e1_warm"), baseline.get("e1_warm")
     if cur_warm and base_warm:
         for key in ("cache_hits", "cache_misses"):
@@ -298,6 +358,13 @@ def run_snapshot(path: str, check_path: Optional[str] = None,
          sat["soundness_failures"], "count")
     for name, value in sorted(sat["counters"].items()):
         emit(f"snapshot.e1_saturate.counters.{name}", value, "count")
+    lint = snap["e1_lint"]
+    emit("snapshot.e1_lint.wall", lint["wall_s"], "s",
+         "lint=warn, full pipeline + verify-ptx")
+    emit("snapshot.e1_lint.lint_s", lint["lint_s"], "s",
+         "verify-ptx pass time (budget: <10% of cold E1 wall)")
+    emit("snapshot.e1_lint.n_findings", lint["n_findings"], "count",
+         "must stay 0: the lowered suite is clean")
     if "e9_serving" in snap:
         e9 = snap["e9_serving"]
         emit("snapshot.e9.cold_req_per_s", e9["cold_req_per_s"], "req/s")

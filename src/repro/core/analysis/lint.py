@@ -1,0 +1,178 @@
+"""Lint orchestration + the ``python -m repro.core.analysis.lint`` CLI.
+
+:func:`run_lint` is the single entry the ``verify-ptx`` pass, the CLI,
+and ``POST /lint`` all share: it runs the def-use verifier, the
+synchronization checker, and the shared-memory race detector over one
+:class:`~repro.core.passes.context.KernelContext` and returns the
+sorted, kernel-stamped :class:`~repro.core.analysis.findings.Finding`
+list.
+
+CLI::
+
+    python -m repro.core.analysis.lint file.ptx [file2.ptx ...]
+    python -m repro.core.analysis.lint --bench jacobi,laplacian
+    python -m repro.core.analysis.lint --corpus all --strict
+
+``--strict`` exits non-zero on any WARNING-or-worse finding (NOTEs are
+informational and never fail a build); the default threshold is ERROR.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json as _json
+import sys
+from typing import Iterable, List, Optional, Tuple
+
+from ..driver.result import Severity
+from ..passes.context import KernelContext, PipelineConfig
+from .findings import Finding
+
+
+def run_lint(ctx: KernelContext) -> List[Finding]:
+    """All static checks over one kernel context, sorted by location."""
+    # registers the cfg/dominators/flows analyses when the linter runs
+    # standalone (CLI / HTTP) outside the pass pipeline
+    from ..passes import analyses as _analyses  # noqa: F401
+    from .defuse import lint_defuse
+    from .races import lint_races
+    from .sync import lint_sync
+
+    findings = [*lint_defuse(ctx), *lint_sync(ctx), *lint_races(ctx)]
+    name = ctx.kernel.name
+    findings = [dataclasses.replace(f, kernel=name)
+                if f.kernel is None else f for f in findings]
+    findings.sort(key=lambda f: (f.uid if f.uid is not None else -1, f.code))
+    return findings
+
+
+def lint_kernel(kernel, config: Optional[PipelineConfig] = None,
+                kernel_name: Optional[str] = None) -> List[Finding]:
+    ctx = KernelContext(kernel, config or PipelineConfig())
+    findings = run_lint(ctx)
+    if kernel_name:
+        findings = [dataclasses.replace(f, kernel=kernel_name)
+                    for f in findings]
+    return findings
+
+
+def lint_module(module, config: Optional[PipelineConfig] = None
+                ) -> List[Finding]:
+    out: List[Finding] = []
+    for kernel in module.kernels:
+        out.extend(lint_kernel(kernel, config=config))
+    return out
+
+
+def lint_source(text: str, config: Optional[PipelineConfig] = None
+                ) -> List[Finding]:
+    from ..ptx.parser import parse
+    return lint_module(parse(text), config=config)
+
+
+# ---------------------------------------------------------------------------
+# corpora
+# ---------------------------------------------------------------------------
+
+def corpus_kernels(which: str) -> List[Tuple[str, object]]:
+    """(name, Kernel) pairs for ``kernelgen`` (the 16-kernel suite),
+    ``apps`` (the Section-8.5 applications), or ``all``."""
+    from ..frontend.kernelgen import all_benches
+    from ..frontend.stencil import lower_to_ptx
+
+    if which not in ("kernelgen", "apps", "all"):
+        raise ValueError(f"unknown corpus {which!r}; "
+                         "expected kernelgen | apps | all")
+    benches = all_benches(include_apps=(which in ("apps", "all")))
+    if which == "apps":
+        suite = set(all_benches(include_apps=False))
+        benches = {n: b for n, b in benches.items() if n not in suite}
+    return [(name, lower_to_ptx(b.program))
+            for name, b in sorted(benches.items())]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _threshold(strict: bool) -> Severity:
+    return Severity.WARNING if strict else Severity.ERROR
+
+
+def _emit(findings: Iterable[Finding], as_json: bool,
+          out=None) -> None:
+    out = out or sys.stdout
+    findings = list(findings)
+    if as_json:
+        print(_json.dumps([f.to_dict() for f in findings], indent=2),
+              file=out)
+        return
+    for f in findings:
+        print(str(f), file=out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.analysis.lint",
+        description="Static PTX semantic analyzer (verify-ptx, standalone)")
+    ap.add_argument("files", nargs="*", help="PTX files to lint")
+    ap.add_argument("--bench", default=None,
+                    help="comma-separated KernelGen bench names")
+    ap.add_argument("--corpus", default=None,
+                    choices=("kernelgen", "apps", "all"),
+                    help="lint a built-in lowered corpus")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on WARNING-or-worse findings "
+                         "(default: ERROR only)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    ap.add_argument("--lane", default="tid.x",
+                    help="lane dimension for the race detector's affine "
+                         "addresses (default: tid.x)")
+    args = ap.parse_args(argv)
+
+    if not args.files and not args.bench and not args.corpus:
+        ap.error("nothing to lint: pass files, --bench, or --corpus")
+
+    config = PipelineConfig(lane=args.lane)
+    findings: List[Finding] = []
+    n_kernels = 0
+
+    for path in args.files:
+        with open(path, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        from ..ptx.parser import parse
+        module = parse(text)
+        n_kernels += len(module.kernels)
+        findings.extend(lint_module(module, config=config))
+
+    if args.bench:
+        from ..frontend.kernelgen import get_bench
+        from ..frontend.stencil import lower_to_ptx
+        for name in [s.strip() for s in args.bench.split(",") if s.strip()]:
+            kernel = lower_to_ptx(get_bench(name).program)
+            n_kernels += 1
+            findings.extend(lint_kernel(kernel, config=config,
+                                        kernel_name=name))
+
+    if args.corpus:
+        for name, kernel in corpus_kernels(args.corpus):
+            n_kernels += 1
+            findings.extend(lint_kernel(kernel, config=config,
+                                        kernel_name=name))
+
+    _emit(findings, args.as_json)
+    by_sev = {s: sum(1 for f in findings if f.severity == s)
+              for s in (Severity.ERROR, Severity.WARNING, Severity.NOTE)}
+    if not args.as_json:
+        print(f"{len(findings)} finding(s) across {n_kernels} kernel(s): "
+              f"{by_sev[Severity.ERROR]} error(s), "
+              f"{by_sev[Severity.WARNING]} warning(s), "
+              f"{by_sev[Severity.NOTE]} note(s)")
+    threshold = _threshold(args.strict)
+    return 1 if any(f.severity >= threshold for f in findings) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

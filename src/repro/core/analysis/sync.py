@@ -1,0 +1,100 @@
+"""Synchronization checker: barriers and shuffles vs divergence.
+
+``bar.sync`` semantics require every (non-exited) thread of the CTA to
+arrive: executing one inside a JOIN-divergent region — where lanes of a
+single warp took different sides of a data-dependent branch and both
+sides do observable work — is a deadlock on pre-Volta hardware and
+undefined behaviour after (ERROR).  Under a divergent *exit guard* the
+exited threads never arrive either; real kernels do this deliberately
+only when the guard is grid-shaped, so it is flagged as a WARNING, not
+an ERROR.
+
+``shfl``/``shfl.sync`` reads another lane's register: inside a JOIN
+region the source lane may be executing the other side (ERROR).  The
+``.sync`` membermask must cover every active lane: a constant mask
+other than ``0xffffffff`` cannot be proven to (ERROR), a register mask
+is unprovable statically (WARNING), and a full mask under an exit
+guard is exactly the paper's corner case — handled by clamp +
+activemask at synthesis time, so it is only a NOTE.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from ..driver.result import Severity
+from ..emulator.decode import K_BARRIER, K_SHFL
+from ..passes.context import KernelContext
+from ..ptx.ir import Imm, Reg
+from .findings import Finding
+from .ops import shfl_mask_operand
+from .uniformity import EXIT_GUARD, JOIN, LEVEL_NAMES, UniformityInfo
+
+FULL_MASK = 0xFFFFFFFF
+
+
+def lint_sync(ctx: KernelContext) -> List[Finding]:
+    cfg = ctx.get("cfg")
+    decoded = ctx.get("decoded")
+    info: UniformityInfo = ctx.get("uniformity")
+    out: List[Finding] = []
+
+    for d in decoded:
+        if d.uid is None:
+            continue
+        level = info.block_level[cfg.block_of[d.uid]] \
+            if d.uid < len(cfg.block_of) else JOIN
+
+        if d.kind == K_BARRIER and d.base == "bar":
+            if level == JOIN:
+                out.append(Finding(
+                    "divergent-barrier", Severity.ERROR,
+                    f"bar.sync inside a {LEVEL_NAMES[JOIN]}-divergent "
+                    "region: lanes on the other side of the branch never "
+                    "arrive (deadlock)", uid=d.uid))
+            elif level == EXIT_GUARD:
+                out.append(Finding(
+                    "guarded-barrier", Severity.WARNING,
+                    "bar.sync under a divergent exit guard: exited "
+                    "threads never arrive at the barrier", uid=d.uid))
+            continue
+
+        if d.kind != K_SHFL:
+            continue
+
+        if level == JOIN:
+            out.append(Finding(
+                "divergent-shfl", Severity.ERROR,
+                "shfl inside a join-divergent region: the source lane "
+                "may be executing the other side of the branch",
+                uid=d.uid))
+            continue
+
+        mask = shfl_mask_operand(d)
+        if mask is None:
+            # legacy pre-sync shfl: implicit full warp; under an exit
+            # guard that is the paper's clamp-handled corner case
+            if level == EXIT_GUARD:
+                out.append(Finding(
+                    "shfl-exit-guard", Severity.NOTE,
+                    "legacy shfl under a divergent exit guard relies on "
+                    "clamp semantics for exited lanes", uid=d.uid))
+            continue
+        if isinstance(mask, Imm):
+            if (mask.value & FULL_MASK) != FULL_MASK:
+                out.append(Finding(
+                    "membermask-noncovering", Severity.ERROR,
+                    f"shfl.sync membermask {mask} does not provably "
+                    "cover all active lanes", uid=d.uid))
+            elif level == EXIT_GUARD:
+                out.append(Finding(
+                    "shfl-exit-guard", Severity.NOTE,
+                    "full-mask shfl.sync under a divergent exit guard "
+                    "relies on clamp semantics for exited lanes",
+                    uid=d.uid))
+        elif isinstance(mask, Reg):
+            out.append(Finding(
+                "membermask-unprovable", Severity.WARNING,
+                f"shfl.sync membermask in register {mask.name} cannot "
+                "be proven to cover the active lanes", uid=d.uid))
+    return out

@@ -34,7 +34,9 @@ from ..ptx.ir import Module
 from ..ptx.printer import print_module
 from ..targets import TargetProfile, default_target, resolve_target, target_names
 from .options import PIPELINE_FIELDS, CompilerOptions
-from .result import CompileResult, Diagnostic, Severity
+from .result import (
+    CompileResult, Diagnostic, Severity, dedupe_diagnostics,
+)
 from .source import NormalizedSource, Source, normalize_source
 
 #: sentinel for "use the session cache" (``None`` means *no* cache)
@@ -47,6 +49,18 @@ _CONSTRUCTION_ONLY = frozenset({"share_global_cache", "cache_entries",
                                 "cache_dir"})
 
 ConfigLike = Union[None, PipelineConfig, CompilerOptions]
+
+
+def _with_verify(passes: Sequence[str]) -> Tuple[str, ...]:
+    """Insert ``verify-ptx`` after ``emulate-flows`` (the linter's race
+    detector reuses the memoized flows) or, absent that, at the front."""
+    passes = tuple(passes)
+    if "verify-ptx" in passes:
+        return passes
+    if "emulate-flows" in passes:
+        i = passes.index("emulate-flows") + 1
+        return passes[:i] + ("verify-ptx",) + passes[i:]
+    return ("verify-ptx",) + passes
 
 
 def _analysis_options(opts: CompilerOptions) -> CompilerOptions:
@@ -293,6 +307,8 @@ class Compiler:
         else:
             passes = SATURATED_DEFAULT_PASSES if opts.saturate \
                 else DEFAULT_PASSES
+        if opts.lint != "off" and opts.passes is None:
+            passes = _with_verify(passes)
         pipeline = PassPipeline(passes=passes, config=opts.pipeline_config())
         out_module, reports = pipeline.run_module(
             ns.module, jobs=self._effective_jobs(opts, len(ns.module.kernels)),
@@ -308,7 +324,8 @@ class Compiler:
             if rep.detection is not None and rep.detection.n_flows == 0:
                 diags.append(Diagnostic(
                     Severity.WARNING, "symbolic emulation found no flows",
-                    source="emulate-flows", kernel=rep.name))
+                    source="emulate-flows", kernel=rep.name,
+                    code="no-flows"))
             t_steps = rep.counters.get("truncated_steps", 0)
             t_forks = rep.counters.get("truncated_forks", 0)
             if t_steps or t_forks:
@@ -324,7 +341,8 @@ class Compiler:
                     "emulation truncated: " + "; ".join(what) +
                     " — detection may be incomplete; raise the budget "
                     "via CompilerOptions",
-                    source="emulate-flows", kernel=rep.name))
+                    source="emulate-flows", kernel=rep.name,
+                    code="truncated"))
             sat_failures = rep.counters.get("sat_soundness_failures", 0)
             if sat_failures:
                 diags.append(Diagnostic(
@@ -332,7 +350,18 @@ class Compiler:
                     f"{sat_failures} extracted rewrite(s) failed the "
                     "differential concrete-emulation soundness gate and "
                     "were dropped (original kernel body kept)",
-                    source="extract", kernel=rep.name))
+                    source="extract", kernel=rep.name, code="sat-gate"))
+            # verify-ptx findings become result diagnostics; in strict
+            # mode everything WARNING-or-worse escalates to ERROR
+            for f in getattr(rep, "findings", ()) or ():
+                sev = f.severity
+                if opts.lint == "strict" and sev >= Severity.WARNING:
+                    sev = Severity.ERROR
+                diags.append(Diagnostic(
+                    sev, f.message, source="verify-ptx",
+                    kernel=f.kernel or rep.name,
+                    code=f.code, location=f.location))
+        diags = dedupe_diagnostics(diags)
         return CompileResult(
             ptx=print_module(out_module),
             module=out_module,

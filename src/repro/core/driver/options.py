@@ -39,15 +39,23 @@ class CompilerOptions:
       when either truncates emulation the compile carries a ``warning``
       diagnostic (results from a truncated emulation are incomplete, so
       the budgets key the cache)
-    * ``prune_flows`` — opt-in detection-aware flow pruning in the
-      emulator (drops forked flows that provably cannot reach a memory
-      or shuffle instruction)
+    * ``prune_flows`` — relevance-gated flow pruning in the emulator
+      (on by default: drops forked flows that provably cannot reach a
+      memory/shuffle instruction *or* a block label, so neither trace
+      events nor block-entry memoization can observe the difference)
     * ``saturate`` — opt-in equality-saturation middle-end: the
       ``saturate``/``extract`` passes run between flow emulation and
       shuffle detection, rewriting each kernel to the target profile's
       cheapest equivalent straight-line form (every rewrite is gated by
       differential concrete emulation; a failed gate keeps the original
       body and emits a WARNING diagnostic)
+    * ``lint`` — ``verify-ptx`` static analysis: ``off`` (default) |
+      ``warn`` (run the analyzer, surface findings as diagnostics at
+      their native severity) | ``strict`` (same, but WARNING-or-worse
+      findings escalate to ERROR diagnostics).  Findings ride each
+      ``KernelReport`` and the JSON wire form; the uniformity *gate*
+      inside ``select-shuffles``/``extract`` is always on regardless
+      of this knob — it is a soundness property, not a diagnostic
 
     Session knobs (execution policy, never part of the cache key):
 
@@ -78,8 +86,9 @@ class CompilerOptions:
     selection: str = "all"
     max_flows: int = 256
     max_steps: int = 200_000
-    prune_flows: bool = False
+    prune_flows: bool = True
     saturate: bool = False
+    lint: str = "off"
 
     jobs: Optional[int] = None
     cache_entries: int = 4096
@@ -92,6 +101,9 @@ class CompilerOptions:
         # everywhere it participates in keys (compile_many dedup)
         if self.passes is not None and not isinstance(self.passes, tuple):
             object.__setattr__(self, "passes", tuple(self.passes))
+        if self.lint not in ("off", "warn", "strict"):
+            raise ValueError(f"lint must be 'off', 'warn' or 'strict', "
+                             f"got {self.lint!r}")
 
     def pipeline_config(self) -> PipelineConfig:
         """The pipeline-facing view (what keys the result cache)."""

@@ -33,17 +33,49 @@ class Severity(enum.IntEnum):
 
 @dataclass(frozen=True)
 class Diagnostic:
-    """One driver/frontend/pass message attached to a result."""
+    """One driver/frontend/pass message attached to a result.
+
+    ``code`` is a stable machine-readable class ("truncated",
+    "no-flows", a ``verify-ptx`` finding code...) and ``location`` an
+    optional statement anchor ("uid:12"); together with ``kernel`` they
+    form the deduplication key — repeated compiles of the same kernel in
+    one session collapse to one diagnostic per (kernel, code, location).
+    """
 
     severity: Severity
     message: str
     source: str = "driver"          # "driver", a frontend or pass name
     kernel: Optional[str] = None    # kernel it concerns, when any
+    code: Optional[str] = None      # stable machine-readable class
+    location: Optional[str] = None  # statement anchor, e.g. "uid:12"
 
     def __str__(self) -> str:
         where = f" [{self.kernel}]" if self.kernel else ""
-        return f"{self.severity.name.lower()}: {self.source}{where}: " \
+        if self.location:
+            where += f" @{self.location}"
+        tag = f" [{self.code}]" if self.code else ""
+        return f"{self.severity.name.lower()}: {self.source}{where}:{tag} " \
                f"{self.message}"
+
+
+def dedupe_diagnostics(diags: List["Diagnostic"]) -> List["Diagnostic"]:
+    """Collapse duplicates, preserving order of first occurrence.
+
+    Coded diagnostics dedupe on (kernel, code, location) — the same
+    finding re-derived for the same statement of the same kernel is one
+    fact however many times it compiles.  Uncoded diagnostics dedupe
+    only on full equality (the dataclass is frozen, so that is the
+    tuple of all fields)."""
+    seen: set = set()
+    out: List[Diagnostic] = []
+    for d in diags:
+        key = (("coded", d.kernel, d.code, d.location)
+               if d.code is not None else d)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(d)
+    return out
 
 
 @dataclass(frozen=True)
@@ -101,11 +133,13 @@ class CompileResult:
     def emulator_counters(self) -> Dict[str, int]:
         """Emulator phase counters summed over kernels (steps, forks,
         memoization hits, truncations, terms interned).  Saturation
-        counters (``sat_`` prefix) live in :attr:`saturation_counters`."""
+        counters (``sat_`` prefix) live in :attr:`saturation_counters`;
+        static-analysis counters (``lint_`` prefix) in
+        :attr:`lint_counters`."""
         total: Dict[str, int] = {}
         for rep in self.reports:
             for name, n in rep.counters.items():
-                if not name.startswith("sat_"):
+                if not name.startswith(("sat_", "lint_")):
                     total[name] = total.get(name, 0) + n
         return total
 
@@ -121,6 +155,27 @@ class CompileResult:
                 if name.startswith("sat_"):
                     total[name] = total.get(name, 0) + n
         return total
+
+    @property
+    def lint_counters(self) -> Dict[str, int]:
+        """``verify-ptx`` static-analysis counters summed over kernels
+        (findings per code and per severity, plus pairs dropped by the
+        uniformity gate).  Empty when ``lint`` was off and the gate
+        never fired."""
+        total: Dict[str, int] = {}
+        for rep in self.reports:
+            for name, n in rep.counters.items():
+                if name.startswith("lint_"):
+                    total[name] = total.get(name, 0) + n
+        return total
+
+    @property
+    def findings(self) -> List[object]:
+        """Static-analysis findings over all kernels, module order."""
+        out: List[object] = []
+        for rep in self.reports:
+            out.extend(getattr(rep, "findings", ()) or ())
+        return out
 
     def diagnostics_at(self, severity: Severity) -> List[Diagnostic]:
         return [d for d in self.diagnostics if d.severity >= severity]
@@ -155,6 +210,8 @@ class CompileResult:
                 "total_time_s": rep.total_time_s,
                 "pass_times": dict(rep.pass_times),
                 "counters": dict(rep.counters),
+                "findings": [f.to_dict()
+                             for f in getattr(rep, "findings", ()) or ()],
                 "detection": None if d is None else {
                     "n_shuffles": d.n_shuffles,
                     "n_loads": d.n_loads,
@@ -179,7 +236,9 @@ class CompileResult:
             "diagnostics": [{"severity": d.severity.name,
                              "message": d.message,
                              "source": d.source,
-                             "kernel": d.kernel}
+                             "kernel": d.kernel,
+                             "code": d.code,
+                             "location": d.location}
                             for d in self.diagnostics],
             "target_profile": self.target_profile.name
             if self.target_profile is not None else None,
@@ -199,6 +258,7 @@ class CompileResult:
             raise ValueError(
                 f"unsupported CompileResult schema {schema!r} "
                 f"(this build speaks {RESULT_SCHEMA_VERSION})")
+        from ..analysis.findings import Finding
         from ..ptx.parser import parse
         opts = dict(payload.get("options") or {})
         if opts.get("passes") is not None:
@@ -218,6 +278,8 @@ class CompileResult:
                 cached=rd.get("cached", False),
                 target=rd.get("target"),
                 counters=dict(rd.get("counters") or {}),
+                findings=[Finding.from_dict(f)
+                          for f in rd.get("findings") or ()],
             ))
         stats_fields = {f.name for f in dataclasses.fields(CacheStats)}
         stats = CacheStats(**{k: v for k, v in
@@ -233,7 +295,9 @@ class CompileResult:
             cache_stats=stats,
             diagnostics=[Diagnostic(Severity[d["severity"]], d["message"],
                                     source=d.get("source", "driver"),
-                                    kernel=d.get("kernel"))
+                                    kernel=d.get("kernel"),
+                                    code=d.get("code"),
+                                    location=d.get("location"))
                          for d in payload.get("diagnostics", ())],
             wall_time_s=payload.get("wall_time_s", 0.0),
             analysis_only=payload.get("analysis_only", False),

@@ -239,13 +239,33 @@ class _BlockExtractor:
 
 
 def extract_kernel(kernel: Kernel, blocks: List[BlockGraph],
-                   profile: TargetProfile) -> ExtractionResult:
-    """Rebuild ``kernel``'s body from the saturated block e-graphs."""
+                   profile: TargetProfile,
+                   frozen: frozenset = frozenset()) -> ExtractionResult:
+    """Rebuild ``kernel``'s body from the saturated block e-graphs.
+
+    Blocks whose ``bid`` is in ``frozen`` (JOIN-divergent regions, per
+    the uniformity analysis) are emitted verbatim: holder-based CSE
+    assumes every lane executes every dominating definition, which a
+    divergent region does not guarantee.  Their statements carry no
+    :class:`InstrInfo`, so the dead-code sweep treats them as opaque —
+    reads inside still keep outside defs alive, defs inside are never
+    deleted.
+    """
     new_body: List[object] = []
     entries: List[Tuple[Optional[object], Optional[InstrInfo]]] = []
     rewrites = 0
     delta = 0.0
     for bg in blocks:
+        if bg.bid in frozen:
+            for uid in range(bg.start, bg.end + 1):
+                stmt = kernel.body[uid]
+                if isinstance(stmt, Label):
+                    entries.append((Label(name=stmt.name, uid=-1), None))
+                else:
+                    entries.append((Instr(opcode=stmt.opcode,
+                                          operands=list(stmt.operands),
+                                          pred=stmt.pred, uid=-1), None))
+            continue
         ex = _BlockExtractor(kernel, bg, profile)
         infos = iter(bg.infos)
         for uid in range(bg.start, bg.end + 1):
@@ -310,12 +330,16 @@ def run_extract(ctx) -> None:
     blocks = ctx.products.pop("_egraph_state", None)
     counters = ctx.products.setdefault("saturation_counters", {})
     for key in ("sat_rewrites", "sat_deleted_instrs",
-                "sat_soundness_failures", "sat_cycle_delta_milli"):
+                "sat_soundness_failures", "sat_cycle_delta_milli",
+                "sat_divergent_blocks_frozen"):
         counters.setdefault(key, 0)
     if not blocks:
         return
+    from ..analysis.uniformity import join_block_ids
+    frozen = join_block_ids(ctx)
+    counters["sat_divergent_blocks_frozen"] += len(frozen)
     profile = resolve_target(ctx.config.target)
-    result = extract_kernel(ctx.kernel, blocks, profile)
+    result = extract_kernel(ctx.kernel, blocks, profile, frozen=frozen)
     if result.rewrites == 0 and result.deleted == 0:
         return                      # nothing changed: keep memoized analyses
     reason = differential_check(ctx.kernel, result.kernel)

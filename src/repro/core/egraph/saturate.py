@@ -121,7 +121,7 @@ def run_saturate(ctx) -> None:
     cfg = ctx.get("cfg")
     flows = ctx.get("flows")
     kernel = ctx.kernel
-    blocks = build_blocks(kernel, cfg)
+    blocks = build_blocks(kernel, cfg, decoded=ctx.get("decoded"))
     emu_counters = ctx.products.get("emulator_counters", {})
     load_unions = cross_flow_load_unions(blocks, flows, emu_counters)
 

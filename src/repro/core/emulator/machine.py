@@ -24,11 +24,13 @@ Performance architecture (PR 6):
 * flow ids, loop-UF ids and bool->term ids are **per-emulator** counters,
   so every compile of the same kernel produces identical terms regardless
   of process history;
-* optional detection-aware pruning (``prune_flows``, off by default)
-  drops forked flows whose remaining path cannot reach any memory or
-  shuffle instruction; a stub ``FlowResult`` with
-  ``terminated="pruned"`` preserves flow counts.  This can perturb
-  block-entry memoization for other flows, hence opt-in.
+* relevance-gated pruning (``prune_flows``, on by default) drops forked
+  flows whose remaining path can reach neither a memory/shuffle
+  instruction (no trace events) **nor a block label** (no block-entry
+  memoization, so sibling flows cannot observe the difference through
+  ``seen_entries`` either — the reachability proof lives in
+  :mod:`repro.core.analysis.reach`); a stub ``FlowResult`` with
+  ``terminated="pruned"`` preserves flow counts.
 
 The emulator exposes a :attr:`SymbolicEmulator.counters` dict (steps,
 forks, memoization hits, truncations, terms interned) consumed by the
@@ -218,14 +220,19 @@ class SymbolicEmulator:
 
     def __init__(self, kernel: Kernel, max_flows: int = DEFAULT_MAX_FLOWS,
                  max_steps: int = DEFAULT_MAX_STEPS,
-                 prune_flows: bool = False) -> None:
+                 prune_flows: bool = True,
+                 ops: Optional[List[Decoded]] = None) -> None:
         self.kernel = kernel
         self.max_flows = max_flows
         self.max_steps = max_steps
         self.prune_flows = prune_flows
         kernel.renumber()
         self.labels = kernel.labels()
-        self.ops: List[Decoded] = decode_kernel(kernel, self.labels)
+        # ``ops`` lets the pass pipeline share one decode of the kernel
+        # between the emulator and the static analyzers (Decoded is
+        # never mutated after decode)
+        self.ops: List[Decoded] = (ops if ops is not None
+                                   else decode_kernel(kernel, self.labels))
         self._analyze_cfg()
         if prune_flows:
             self._analyze_reach()
@@ -279,42 +286,18 @@ class SymbolicEmulator:
                                 written.update(self._dsts(s))
 
     def _analyze_reach(self) -> None:
-        """Which pcs can still reach a memory/shuffle instruction?
+        """Which pcs can still reach a statement pruning must preserve?
 
-        Conservative forward-successor graph (conditional branches take
-        both edges); used only by detection-aware pruning.
+        Delegates to :func:`repro.core.analysis.reach.reach_flags`,
+        which seeds memory/shuffle instructions (trace events) *and*
+        labels (block-entry memoization points) — a pc reaching neither
+        can be dropped without any observable effect, which is what
+        makes pruning sound enough to be the default.  Imported lazily:
+        the analysis package must stay importable without the emulator
+        and vice versa.
         """
-        ops = self.ops
-        n = len(ops)
-        succ: List[List[int]] = [[] for _ in range(n)]
-        reach = [False] * n
-        for i, d in enumerate(ops):
-            k = d.kind
-            if k in (K_LD, K_ST, K_SHFL):
-                reach[i] = True
-            if k == K_BRA:
-                if d.target is not None:
-                    succ[i].append(d.target)
-                    if d.pred is not None and i + 1 < n:
-                        succ[i].append(i + 1)
-                elif i + 1 < n:
-                    succ[i].append(i + 1)
-            elif k == K_RET:
-                if d.pred is not None and i + 1 < n:
-                    succ[i].append(i + 1)
-            elif i + 1 < n:
-                succ[i].append(i + 1)
-        changed = True
-        while changed:
-            changed = False
-            for i in range(n - 1, -1, -1):
-                if not reach[i]:
-                    for j in succ[i]:
-                        if reach[j]:
-                            reach[i] = True
-                            changed = True
-                            break
-        self._reach_mem = reach
+        from ..analysis.reach import reach_flags
+        self._reach_mem = reach_flags(self.ops)
 
     @staticmethod
     def _dsts(instr: Instr) -> List[str]:

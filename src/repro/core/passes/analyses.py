@@ -50,6 +50,16 @@ class CFG:
         return 0
 
 
+@register_analysis("decoded")
+def _compute_decoded(ctx: KernelContext):
+    """The pre-decoded micro-op stream (uids == body indices), shared by
+    the symbolic emulator, the e-graph builder, and the static
+    analyzers — ``Decoded`` is never mutated after decode."""
+    from ..emulator.decode import decode_kernel
+    ctx.kernel.renumber()
+    return decode_kernel(ctx.kernel)
+
+
 @register_analysis("cfg")
 def _compute_cfg(ctx: KernelContext) -> CFG:
     kernel = ctx.kernel
@@ -139,7 +149,8 @@ def _compute_flows(ctx: KernelContext) -> List[FlowResult]:
     return emulate(ctx.kernel,
                    counters=ctx.products.setdefault("emulator_counters", {}),
                    max_flows=cfg.max_flows, max_steps=cfg.max_steps,
-                   prune_flows=cfg.prune_flows)
+                   prune_flows=cfg.prune_flows,
+                   ops=ctx.get("decoded"))
 
 
 @dataclass

@@ -36,8 +36,9 @@ class PipelineConfig:
     selection: str = "all"      # candidate policy: all | cost
     max_flows: int = 256        # emulator: fork budget before truncation
     max_steps: int = 200_000    # emulator: step budget before truncation
-    prune_flows: bool = False   # emulator: detection-aware flow pruning
+    prune_flows: bool = True    # emulator: relevance-gated flow pruning
     saturate: bool = False      # equality-saturation middle-end (egraph)
+    lint: str = "off"           # verify-ptx static analysis: off | warn | strict
 
     def cache_token(self) -> Tuple:
         # the target participates as its *resolved* profile name so
@@ -46,7 +47,7 @@ class PipelineConfig:
         return (self.mode, self.max_delta, self.lane,
                 resolve_target(self.target).name, self.selection,
                 self.max_flows, self.max_steps, self.prune_flows,
-                self.saturate)
+                self.saturate, self.lint)
 
 
 # ---------------------------------------------------------------------------

@@ -48,7 +48,8 @@ from ..ptx.printer import print_kernel
 
 #: bump when the on-disk entry format changes; participates in the
 #: hashed key so stale-format entries miss instead of mis-deserializing
-SCHEMA_VERSION = 1
+#: (v2: KernelReport grew the static-analysis ``findings`` field)
+SCHEMA_VERSION = 2
 
 _TMP_DIR = "tmp"
 

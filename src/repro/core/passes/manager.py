@@ -44,6 +44,7 @@ class KernelReport:
     target: Optional[str] = None              # resolved profile name
     selection: Optional[object] = None        # targets.cost.SelectionReport
     counters: Dict[str, int] = field(default_factory=dict)  # emulator counters
+    findings: List[object] = field(default_factory=list)  # analysis.Finding
 
     @property
     def summary(self) -> str:
@@ -180,7 +181,9 @@ class PassPipeline:
             target=resolve_target(self.config.target).name,
             selection=ctx.products.get("selection"),
             counters={**ctx.products.get("emulator_counters", {}),
-                      **ctx.products.get("saturation_counters", {})},
+                      **ctx.products.get("saturation_counters", {}),
+                      **ctx.products.get("lint_counters", {})},
+            findings=list(ctx.products.get("findings", ())),
         )
         out = ctx.kernel
         if cache is not None and key is not None:

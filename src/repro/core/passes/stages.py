@@ -30,6 +30,15 @@ class EmulateFlows:
 
     def run(self, ctx: KernelContext) -> None:
         ctx.get("flows")
+        # The always-on uniformity safety gate (select-shuffles /
+        # extract) consumes these on the same un-transformed kernel, in
+        # every pipeline configuration — computing them here (instead of
+        # at first use inside a later pass) keeps per-pass timings
+        # attributing shared infrastructure to the shared stage rather
+        # than to whichever consumer happens to run first.
+        from ..analysis import uniformity as _uniformity  # noqa: F401
+        ctx.get("cfg")
+        ctx.get("uniformity")
 
 
 @register_pass("detect-shuffles")
@@ -71,6 +80,27 @@ class Extract:
         run_extract(ctx)
 
 
+@register_pass("verify-ptx")
+class VerifyPtx:
+    """Static semantic analysis (uniformity, synchronization, races,
+    def-use) over the input kernel.  Publishes the finding list and
+    ``lint_``-prefixed counters as products; the driver lifts findings
+    into result diagnostics.  Scheduled only when ``config.lint`` is not
+    ``"off"`` (the knob is in the cache token, so linted and unlinted
+    results never share cache entries)."""
+
+    def run(self, ctx: KernelContext) -> None:
+        # late import: the analysis package pulls in the driver's
+        # Severity enum
+        from ..analysis.lint import run_lint
+        from ..analysis.findings import finding_counters
+        findings = run_lint(ctx)
+        ctx.products["findings"] = findings
+        counters = ctx.products.setdefault("lint_counters", {})
+        for name, n in finding_counters(findings).items():
+            counters[name] = counters.get(name, 0) + n
+
+
 def _detection(ctx: KernelContext):
     detection = ctx.products.get("detection")
     if detection is None:
@@ -79,15 +109,32 @@ def _detection(ctx: KernelContext):
     return detection
 
 
+def _gate_detection(ctx: KernelContext, detection):
+    """The always-on uniformity safety gate: refuse to synthesize a
+    shuffle whose load sits in a join-divergent region (the source lane
+    may be executing the other side of the branch — the exact hazard
+    class the static analyzer flags as ``divergent-shfl``)."""
+    from ..analysis.uniformity import gate_pairs
+    gated, dropped = gate_pairs(ctx, detection)
+    if dropped:
+        counters = ctx.products.setdefault("lint_counters", {})
+        counters["lint_gated_pairs"] = \
+            counters.get("lint_gated_pairs", 0) + dropped
+        ctx.products["detection"] = gated
+    return gated
+
+
 @register_pass("select-shuffles")
 class SelectShuffles:
-    """Cost-model-guided candidate selection against the target profile."""
+    """Cost-model-guided candidate selection against the target profile,
+    behind the uniformity safety gate (divergent candidates never reach
+    the cost model, whatever the selection policy)."""
 
     def run(self, ctx: KernelContext) -> None:
         # late import: keeps the targets package import-light and avoids
         # synthesis <-> passes import cycles
         from ..targets.cost import select
-        detection = _detection(ctx)
+        detection = _gate_detection(ctx, _detection(ctx))
         if ctx.config.selection != "cost":
             return
         report = select(detection, ctx.config.target, mode=ctx.config.mode)
@@ -104,7 +151,9 @@ class SynthesizeShuffles:
         # late import: synthesis.__init__ imports the legacy wrapper,
         # which imports this package
         from ..synthesis.codegen import synthesize
-        detection = _detection(ctx)
+        # idempotent re-gate: covers custom pass lists that synthesize
+        # without the select stage
+        detection = _gate_detection(ctx, _detection(ctx))
         new_kernel = synthesize(ctx.kernel, detection,
                                 mode=ctx.config.mode,
                                 target=ctx.config.target)

@@ -13,6 +13,9 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple, Union
 
+# "%r12" -> prefix "r" (matches a `.reg .u32 %r<N>` family declaration)
+_REG_NAME_RE = re.compile(r"%([A-Za-z_]+)(\d+)$")
+
 TYPE_WIDTH = {
     "pred": 1,
     "b8": 8, "s8": 8, "u8": 8,
@@ -146,25 +149,45 @@ class Kernel:
         self.decls.append((ptype, name, 0))  # count 0 => single register decl
         return name
 
+    def _reg_lookup(self, reg: str) -> Optional[str]:
+        """Declared PTX type of ``reg``, via a per-kernel declaration
+        map (rebuilt whenever ``decls`` grows, e.g. via ``new_reg``):
+        single declarations by exact name, family declarations
+        (``.reg .u32 %r<6>``) by letters-only prefix — the same two
+        shapes the old per-call regex scan accepted."""
+        cache = getattr(self, "_reg_cache", None)
+        if cache is None or cache[0] != len(self.decls):
+            singles: Dict[str, str] = {}
+            families: Dict[str, str] = {}
+            for ptype, prefix, count in self.decls:
+                if count == 0:
+                    singles.setdefault(prefix, ptype)
+                elif _REG_NAME_RE.match(f"%{prefix}0"):
+                    families.setdefault(prefix, ptype)
+            cache = (len(self.decls), singles, families, {})
+            self._reg_cache = cache
+        memo = cache[3]
+        if reg in memo:
+            return memo[reg]
+        out = cache[1].get(reg)
+        if out is None and reg.startswith("%"):
+            body = reg[1:]
+            j = len(body)
+            while j > 0 and body[j - 1].isdigit():
+                j -= 1
+            if j < len(body):
+                out = cache[2].get(body[:j])
+        memo[reg] = out
+        return out
+
     def reg_width(self, reg: str) -> int:
         if reg in SPECIAL_REGS:
             return 32
-        m = re.match(r"%([A-Za-z_]+)(\d+)$", reg)
-        for ptype, prefix, count in self.decls:
-            if count == 0 and prefix == reg:
-                return TYPE_WIDTH[ptype]
-            if m and count > 0 and prefix == m.group(1):
-                return TYPE_WIDTH[ptype]
-        return 32
+        ptype = self._reg_lookup(reg)
+        return TYPE_WIDTH[ptype] if ptype is not None else 32
 
     def reg_type(self, reg: str) -> Optional[str]:
-        m = re.match(r"%([A-Za-z_]+)(\d+)$", reg)
-        for ptype, prefix, count in self.decls:
-            if count == 0 and prefix == reg:
-                return ptype
-            if m and count > 0 and prefix == m.group(1):
-                return ptype
-        return None
+        return self._reg_lookup(reg)
 
 
 @dataclass

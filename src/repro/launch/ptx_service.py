@@ -18,9 +18,20 @@ Endpoints
     :meth:`~repro.core.driver.CompileResult.to_json_dict` payload —
     the PTX is byte-identical to an in-process ``Compiler.compile``.
 
+``POST /lint``
+    Same ``{"ptx" | "bench"}`` request shape, but runs only the
+    ``verify-ptx`` static analyzer (no compilation, no cache):
+    responds with ``{"findings": [...], "counts": {...},
+    "clean": bool, "n_kernels": N}`` where ``clean`` means no
+    WARNING-or-worse finding.  Optional ``"options"`` take the same
+    pipeline fields as ``/compile`` (``lane`` steers the race
+    detector's affine addresses).
+
 ``GET /stats``
     Session + cache observability: request/error counters, two-tier
-    cache stats (memory and ``disk_*``), aggregated pass times.
+    cache stats (memory and ``disk_*``), aggregated pass times, and
+    per-code ``lint_*`` finding counters from both compile-path
+    ``verify-ptx`` runs and ``/lint`` requests.
 
 ``GET /healthz``
     Liveness: ``{"ok": true}``.
@@ -126,8 +137,12 @@ class _Handler(BaseHTTPRequestHandler):
                                            " try /compile, /stats, /healthz"})
 
     def do_POST(self) -> None:  # noqa: N802
-        if self.path != "/compile":
-            self._send_json(404, {"error": f"no such endpoint {self.path}"})
+        handlers = {"/compile": lambda p: self.service.handle_compile(p),
+                    "/lint": lambda p: self.service.handle_lint(p)}
+        handler = handlers.get(self.path)
+        if handler is None:
+            self._send_json(404, {"error": f"no such endpoint {self.path};"
+                                           " try /compile, /lint"})
             return
         try:
             length = int(self.headers.get("Content-Length") or 0)
@@ -135,7 +150,7 @@ class _Handler(BaseHTTPRequestHandler):
                 payload = json.loads(self.rfile.read(length) or b"{}")
             except json.JSONDecodeError as e:
                 raise _ServiceError(400, f"request body is not JSON: {e}")
-            result = self.service.handle_compile(payload)
+            result = handler(payload)
         except _ServiceError as e:
             self.service.count_error()
             self._send_json(e.status, {"error": str(e)})
@@ -173,6 +188,7 @@ class PtxServiceServer:
         self._stats_lock = threading.Lock()
         self._requests = 0
         self._errors = 0
+        self._lint_totals: Dict[str, int] = {}   # /lint finding counters
         self._started = time.time()
 
     # ------------------------------------------------------------------
@@ -220,9 +236,11 @@ class PtxServiceServer:
         with self._stats_lock:
             self._errors += 1
 
-    def handle_compile(self, payload: Dict) -> Dict:
-        """Compile one request payload; raises ``_ServiceError`` on bad
-        input so the handler can answer 4xx instead of 500."""
+    @staticmethod
+    def _request_input(payload: Dict) -> Dict:
+        """Shared ``/compile`` + ``/lint`` request validation: returns
+        ``{"ptx": text | None, "bench": name | None, "options": {...}}``
+        with exactly one source set and options field-checked."""
         if not isinstance(payload, dict):
             raise _ServiceError(400, "request body must be a JSON object")
         ptx = payload.get("ptx")
@@ -231,14 +249,10 @@ class PtxServiceServer:
             raise _ServiceError(
                 400, 'pass exactly one of "ptx" or "bench"')
         if bench is not None:
-            from repro.core.frontend.kernelgen import get_bench
             try:
-                [name] = parse_bench_list(str(bench))
+                [bench] = parse_bench_list(str(bench))
             except ValueError as e:
                 raise _ServiceError(400, str(e))
-            src = get_bench(name)
-        else:
-            src = ptx
         options = payload.get("options") or {}
         if not isinstance(options, dict):
             raise _ServiceError(400, '"options" must be a JSON object')
@@ -248,6 +262,18 @@ class PtxServiceServer:
             raise _ServiceError(
                 400, f"unknown option(s) {unknown}; requests may set "
                      f"{sorted(PIPELINE_FIELDS)}")
+        return {"ptx": ptx, "bench": bench, "options": options}
+
+    def handle_compile(self, payload: Dict) -> Dict:
+        """Compile one request payload; raises ``_ServiceError`` on bad
+        input so the handler can answer 4xx instead of 500."""
+        req = self._request_input(payload)
+        if req["bench"] is not None:
+            from repro.core.frontend.kernelgen import get_bench
+            src = get_bench(req["bench"])
+        else:
+            src = req["ptx"]
+        options = req["options"]
         try:
             result = self.compiler.compile(src, **options)
         except (ValueError, TypeError, KeyError, SyntaxError) as e:
@@ -262,11 +288,66 @@ class PtxServiceServer:
             self._requests += 1
         return result.to_json_dict()
 
+    def handle_lint(self, payload: Dict) -> Dict:
+        """Run the ``verify-ptx`` static analyzer over one request.
+
+        No compilation, no cache: the request's kernels are linted
+        directly and the per-code finding counters fold into the
+        session totals ``GET /stats`` reports."""
+        from repro.core.analysis.findings import Severity, finding_counters
+        from repro.core.analysis.lint import lint_kernel
+        from repro.core.driver.options import CompilerOptions
+
+        req = self._request_input(payload)
+        try:
+            config = CompilerOptions().replace(
+                **req["options"]).pipeline_config()
+        except (ValueError, TypeError) as e:
+            raise _ServiceError(400, f"{type(e).__name__}: {e}")
+        try:
+            if req["bench"] is not None:
+                from repro.core.frontend.kernelgen import get_bench
+                from repro.core.frontend.stencil import lower_to_ptx
+                kernel = lower_to_ptx(get_bench(req["bench"]).program)
+                findings = lint_kernel(kernel, config=config,
+                                       kernel_name=req["bench"])
+                n_kernels = 1
+            else:
+                from repro.core.ptx.parser import parse
+                module = parse(req["ptx"])
+                if not module.kernels:
+                    raise _ServiceError(400, "input contained no kernels")
+                findings = []
+                for kernel in module.kernels:
+                    findings.extend(lint_kernel(kernel, config=config))
+                n_kernels = len(module.kernels)
+        except _ServiceError:
+            raise
+        except (ValueError, TypeError, KeyError, SyntaxError) as e:
+            raise _ServiceError(400, f"{type(e).__name__}: {e}")
+        counts = finding_counters(findings)
+        with self._stats_lock:
+            self._requests += 1
+            for key, n in counts.items():
+                self._lint_totals[key] = self._lint_totals.get(key, 0) + n
+        return {
+            "findings": [f.to_dict() for f in findings],
+            "counts": counts,
+            "clean": not any(f.severity >= Severity.WARNING
+                             for f in findings),
+            "n_kernels": n_kernels,
+        }
+
     def stats_payload(self) -> Dict:
         cc = self.compiler
         disk = cc.cache.disk if cc.cache is not None else None
         with self._stats_lock:
             requests, errors = self._requests, self._errors
+            lint_totals = dict(self._lint_totals)
+        # compile-path verify-ptx counters + /lint endpoint tallies
+        for k, v in cc.counters.items():
+            if k.startswith("lint_"):
+                lint_totals[k] = lint_totals.get(k, 0) + v
         return {
             "ok": True,
             "uptime_s": round(time.time() - self._started, 3),
@@ -289,10 +370,12 @@ class PtxServiceServer:
             # sat_* counters (empty until a saturate=on compile runs)
             "emulator_counters": {
                 k: v for k, v in cc.counters.items()
-                if not k.startswith("sat_")},
+                if not k.startswith(("sat_", "lint_"))},
             "saturation_counters": {
                 k: v for k, v in cc.counters.items()
                 if k.startswith("sat_")},
+            # verify-ptx findings per code/severity (compile + /lint)
+            "lint_counters": lint_totals,
         }
 
 
@@ -346,6 +429,19 @@ class PtxServiceClient:
         from repro.core.driver import CompileResult
         return CompileResult.from_json_dict(
             self.compile(ptx=ptx, bench=bench, **options))
+
+    def lint(self, ptx: Optional[str] = None,
+             bench: Optional[str] = None, **options) -> Dict:
+        """``POST /lint``; returns ``{"findings", "counts", "clean",
+        "n_kernels"}``."""
+        payload: Dict = {}
+        if ptx is not None:
+            payload["ptx"] = ptx
+        if bench is not None:
+            payload["bench"] = bench
+        if options:
+            payload["options"] = options
+        return self._request("POST", "/lint", payload)
 
     def stats(self) -> Dict:
         return self._request("GET", "/stats")

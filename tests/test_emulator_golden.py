@@ -122,7 +122,7 @@ def test_branchy_flow_forks_are_independent():
 
 
 # ---------------------------------------------------------------------------
-# detection-aware pruning (opt-in) keeps observables identical here
+# detection-aware pruning (on by default) keeps observables identical here
 # ---------------------------------------------------------------------------
 
 def test_prune_flows_preserves_ptx_and_pairs():
@@ -133,7 +133,7 @@ def test_prune_flows_preserves_ptx_and_pairs():
 
     module = Module(kernels=[lower_to_ptx(b.program)
                              for b in all_benches().values()])
-    with Compiler(jobs=0) as base, \
+    with Compiler(jobs=0, prune_flows=False) as base, \
             Compiler(jobs=0, prune_flows=True) as pruned:
         r0 = base.compile(module, cache=None)
         r1 = pruned.compile(module, cache=None)
@@ -181,7 +181,7 @@ def test_pruned_stub_flows_skipped_by_detection():
     from repro.core.synthesis.detect import detect
 
     kernel = parse(PRUNABLE_PTX).kernels[0]
-    base = emulate(kernel)
+    base = emulate(kernel, prune_flows=False)
     counters: dict = {}
     flows = emulate(kernel, counters=counters, prune_flows=True)
     pruned = [fr for fr in flows if fr.terminated == "pruned"]

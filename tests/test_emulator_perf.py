@@ -112,7 +112,7 @@ def test_budgets_are_part_of_cache_token():
 
     a = PipelineConfig().cache_token
     b = PipelineConfig(max_flows=7).cache_token
-    c = PipelineConfig(prune_flows=True).cache_token
+    c = PipelineConfig(prune_flows=False).cache_token
     assert len({a, b, c}) == 3
 
 
@@ -170,12 +170,12 @@ def test_check_schema_mismatch_fails_fast():
 
 
 def test_committed_baseline_is_well_formed():
-    """BENCH_PR7.json in the repo root must parse, carry the schema
+    """BENCH_PR8.json in the repo root must parse, carry the schema
     stamp, and self-check cleanly (timings identical to themselves)."""
     import os
     from benchmarks.snapshot import SCHEMA, check, load
 
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR7.json")
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_PR8.json")
     snap = load(path)
     assert snap["schema"] == SCHEMA
     assert snap["e1_cold"]["n_kernels"] == 16
@@ -185,6 +185,9 @@ def test_committed_baseline_is_well_formed():
     assert sat["soundness_failures"] == 0
     assert sat["n_improved"] >= 3
     assert sat["counters"]["sat_cycle_delta_milli"] > 0
+    lint = snap["e1_lint"]
+    assert lint["n_findings"] == 0
+    assert lint["lint_s"] < 0.10 * snap["e1_cold"]["wall_s"]
     assert check(snap, snap) == []
 
 

@@ -1,0 +1,451 @@
+"""Static PTX semantic analyzer (PR 8): unit + integration tests.
+
+Covers the four analyses (uniformity, synchronization, shared-memory
+races, def-use), the adversarial corpus in ``tests/lint_corpus/``, the
+clean-corpora property, the uniformity gate inside ``select-shuffles``
+and egraph ``extract``, diagnostic deduplication, the JSON wire form,
+the CLI, and the ``POST /lint`` service endpoint.
+"""
+
+import glob
+import json
+import os
+
+import pytest
+
+from emulator_golden import BRANCHY_PTX
+
+CORPUS_DIR = os.path.join(os.path.dirname(__file__), "lint_corpus")
+
+
+def _corpus(name: str) -> str:
+    with open(os.path.join(CORPUS_DIR, name), "r", encoding="utf-8") as fh:
+        return fh.read()
+
+
+def _lint(text: str):
+    from repro.core.analysis.lint import lint_source
+    return lint_source(text)
+
+
+# ---------------------------------------------------------------------------
+# adversarial corpus: every planted bug detected, exact code/severity/uid
+# ---------------------------------------------------------------------------
+
+CORPUS_EXPECTATIONS = {
+    # file -> set of (code, severity name, uid)
+    "div_shfl.ptx": {("divergent-shfl", "ERROR", 7)},
+    "bar_deadlock.ptx": {("divergent-barrier", "ERROR", 6)},
+    "shared_race.ptx": {("shared-race", "WARNING", 6)},
+    "shared_synced.ptx": set(),
+    "undef_use.ptx": {("undef-use", "ERROR", 2)},
+    "width_mismatch.ptx": {("width-mismatch", "WARNING", 2)},
+}
+
+
+def test_corpus_is_complete():
+    files = {os.path.basename(p)
+             for p in glob.glob(os.path.join(CORPUS_DIR, "*.ptx"))}
+    assert files == set(CORPUS_EXPECTATIONS)
+
+
+@pytest.mark.parametrize("fname", sorted(CORPUS_EXPECTATIONS))
+def test_corpus_kernel_findings(fname):
+    findings = _lint(_corpus(fname))
+    got = {(f.code, f.severity.name, f.uid) for f in findings}
+    assert got == CORPUS_EXPECTATIONS[fname], findings
+
+
+def test_race_finding_names_the_store():
+    [f] = _lint(_corpus("shared_race.ptx"))
+    assert "uid:3" in f.message      # the racing store's anchor
+    assert f.location == "uid:6"     # reported at the load
+
+
+def test_finding_str_and_dict_roundtrip():
+    from repro.core.analysis.findings import Finding
+    [f] = _lint(_corpus("undef_use.ptx"))
+    assert str(f) == ("undef_use:2: error [undef-use] register %r4 is "
+                      "read but never defined on any path from the "
+                      "kernel entry")
+    assert Finding.from_dict(f.to_dict()) == f
+
+
+# ---------------------------------------------------------------------------
+# clean corpora: KernelGen suite + applications + golden branchy
+# ---------------------------------------------------------------------------
+
+def test_builtin_corpora_lint_clean():
+    """The 19 lowered bench kernels carry zero findings of any level."""
+    from repro.core.analysis.lint import corpus_kernels, lint_kernel
+    kernels = corpus_kernels("all")
+    assert len(kernels) == 19
+    for name, kernel in kernels:
+        findings = lint_kernel(kernel, kernel_name=name)
+        assert findings == [], (name, findings)
+
+
+def test_branchy_lints_note_only():
+    """The golden stress kernel: exactly one NOTE (an intentional
+    float-load-into-int-register reinterpretation), nothing worse."""
+    from repro.core.driver.result import Severity
+    findings = _lint(BRANCHY_PTX)
+    assert [(f.code, f.uid) for f in findings] == [("type-class", 8)]
+    assert findings[0].severity == Severity.NOTE
+
+
+# ---------------------------------------------------------------------------
+# uniformity analysis facts on the branchy kernel
+# ---------------------------------------------------------------------------
+
+def test_branchy_uniformity_levels():
+    from repro.core.analysis.uniformity import (
+        EXIT_GUARD, JOIN, UNIFORM)
+    from repro.core.passes.context import KernelContext, PipelineConfig
+    from repro.core.ptx.parser import parse
+
+    kernel = parse(BRANCHY_PTX).kernels[0]
+    ctx = KernelContext(kernel, PipelineConfig())
+    info = ctx.get("uniformity")
+    assert info.block_level == [UNIFORM, EXIT_GUARD, JOIN, JOIN, JOIN,
+                                EXIT_GUARD, UNIFORM]
+    # @%p1 bra DONE guards a pure exit; @%p2 bra LEFT joins observable
+    # work; @%p3 bra LOOP's predicate was re-defined from uniform
+    # sources (setp.lt.u32 %p3, %r5, 4 — %r5 is not tid-derived)
+    assert info.branch_class == {5: EXIT_GUARD, 10: JOIN, 20: UNIFORM}
+
+
+def test_reach_seeds_labels_and_memory():
+    """`prune_flows` soundness: a pc that can still reach a Label must
+    stay unpruned (block-entry memoization observes it) even when no
+    memory op is reachable."""
+    from repro.core.analysis.reach import reach_flags
+    from repro.core.emulator.decode import decode_kernel
+    from repro.core.ptx.parser import parse
+
+    src = """
+.visible .entry reachy(.param .u64 a)
+{
+    .reg .pred %p1;
+    .reg .u32 %r<4>;
+    .reg .u64 %rd<4>;
+    ld.param.u64 %rd1, [a];
+    mov.u32 %r1, %tid.x;
+    setp.lt.u32 %p1, %r1, 16;
+    @%p1 bra MEM;
+    ret;
+MEM:
+    st.global.u32 [%rd1], %r1;
+EMPTY:
+    ret;
+}
+"""
+    kernel = parse(src).kernels[0]
+    kernel.renumber()
+    flags = reach_flags(decode_kernel(kernel))
+    # uid 4 is the bare fallthrough ret: nothing reachable -> prunable
+    assert flags[4] is False
+    # labels themselves seed reachability (memoization-relevant), even
+    # the trailing EMPTY one whose only successor is ret
+    from repro.core.emulator.decode import K_LABEL
+    label_uids = [d.uid for d in decode_kernel(kernel)
+                  if d.kind == K_LABEL]
+    assert len(label_uids) == 2
+    for uid in label_uids:
+        assert flags[uid] is True
+    # everything from the entry is live
+    assert flags[0] is True
+
+
+def test_prune_default_on_and_in_cache_token():
+    from repro.core.passes.context import PipelineConfig
+    assert PipelineConfig().prune_flows is True
+    assert PipelineConfig().cache_token \
+        != PipelineConfig(prune_flows=False).cache_token
+    assert PipelineConfig().cache_token \
+        != PipelineConfig(lint="warn").cache_token
+
+
+# ---------------------------------------------------------------------------
+# the synthesis gate: select-shuffles + egraph extract
+# ---------------------------------------------------------------------------
+
+GATED_PTX = """
+.visible .entry gated(.param .u64 a, .param .u64 b)
+{
+    .reg .pred %p<2>;
+    .reg .u32 %r<8>;
+    .reg .u64 %rd<8>;
+    ld.param.u64 %rd1, [a];
+    ld.param.u64 %rd2, [b];
+    mov.u32 %r1, %tid.x;
+    setp.lt.u32 %p1, %r1, 16;
+    @%p1 bra OTHER;
+    mul.wide.u32 %rd3, %r1, 4;
+    add.u64 %rd4, %rd1, %rd3;
+    ld.global.u32 %r2, [%rd4];
+    add.u64 %rd5, %rd4, 4;
+    ld.global.u32 %r3, [%rd5];
+    add.u32 %r4, %r2, %r3;
+    add.u64 %rd6, %rd2, %rd3;
+    st.global.u32 [%rd6], %r4;
+    bra DONE;
+OTHER:
+    mul.wide.u32 %rd3, %r1, 4;
+    add.u64 %rd6, %rd2, %rd3;
+    st.global.u32 [%rd6], %r1;
+DONE:
+    ret;
+}
+"""
+
+# identical loads, but the divergent branch only guards a pure exit —
+# the paper's ubiquitous bounds-check shape, which synthesis may keep
+UNGATED_PTX = """
+.visible .entry ungated(.param .u64 a, .param .u64 b)
+{
+    .reg .pred %p<2>;
+    .reg .u32 %r<8>;
+    .reg .u64 %rd<8>;
+    ld.param.u64 %rd1, [a];
+    ld.param.u64 %rd2, [b];
+    mov.u32 %r1, %tid.x;
+    setp.ge.u32 %p1, %r1, 16;
+    @%p1 bra DONE;
+    mul.wide.u32 %rd3, %r1, 4;
+    add.u64 %rd4, %rd1, %rd3;
+    ld.global.u32 %r2, [%rd4];
+    add.u64 %rd5, %rd4, 4;
+    ld.global.u32 %r3, [%rd5];
+    add.u32 %r4, %r2, %r3;
+    add.u64 %rd6, %rd2, %rd3;
+    st.global.u32 [%rd6], %r4;
+DONE:
+    ret;
+}
+"""
+
+
+def test_gate_rejects_divergent_shuffle_statically():
+    """A shuffle opportunity inside a JOIN-divergent region is dropped
+    before synthesis; the same pair under an exit guard survives."""
+    from repro.core.driver import Compiler
+
+    with Compiler(jobs=0) as cc:
+        gated = cc.compile(GATED_PTX, cache=None)
+        ungated = cc.compile(UNGATED_PTX, cache=None)
+    assert gated.n_shuffles == 0
+    assert "shfl" not in gated.ptx
+    assert gated.lint_counters.get("lint_gated_pairs") == 1
+    assert ungated.n_shuffles == 1
+    assert "shfl" in ungated.ptx
+    assert "lint_gated_pairs" not in ungated.lint_counters
+
+
+def test_gate_pairs_does_not_mutate_shared_detection():
+    from repro.core.analysis.uniformity import gate_pairs
+    from repro.core.emulator.machine import emulate
+    from repro.core.passes.context import KernelContext, PipelineConfig
+    from repro.core.ptx.parser import parse
+    from repro.core.synthesis.detect import detect
+
+    kernel = parse(GATED_PTX).kernels[0]
+    detection = detect(kernel, emulate(kernel))
+    assert detection.pairs
+    before = list(detection.pairs)
+    ctx = KernelContext(kernel, PipelineConfig())
+    gated, dropped = gate_pairs(ctx, detection)
+    assert dropped == len(before)
+    assert gated is not detection
+    assert detection.pairs == before     # input untouched
+
+
+def test_extract_freezes_join_blocks():
+    """The saturated pipeline never rewrites inside a JOIN region: the
+    frozen-block counter fires on branchy and the result still passes
+    the differential soundness gate."""
+    from repro.core.driver import Compiler
+
+    with Compiler(jobs=0, saturate=True) as cc:
+        result = cc.compile(BRANCHY_PTX, cache=None)
+    sc = result.saturation_counters
+    assert sc.get("sat_divergent_blocks_frozen") == 3
+    assert sc.get("sat_soundness_failures") == 0
+
+
+def test_saturated_suite_has_no_gate_failures():
+    """KernelGen under saturate=on: the static freeze leaves zero work
+    for the dynamic differential gate to reject."""
+    from repro.core.driver import Compiler
+    from repro.core.frontend.kernelgen import all_benches
+    from repro.core.frontend.stencil import lower_to_ptx
+    from repro.core.ptx import Module
+
+    module = Module(kernels=[lower_to_ptx(b.program)
+                             for b in all_benches().values()])
+    with Compiler(jobs=0, saturate=True) as cc:
+        result = cc.compile(module, cache=None)
+    sc = result.saturation_counters
+    assert sc.get("sat_soundness_failures", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# compiler integration: the verify-ptx pass + diagnostics
+# ---------------------------------------------------------------------------
+
+def test_lint_off_by_default():
+    from repro.core.driver import Compiler
+    with Compiler(jobs=0) as cc:
+        result = cc.compile(BRANCHY_PTX, cache=None)
+    assert "verify-ptx" not in result.pass_times
+    assert result.findings == []
+    assert not [d for d in result.diagnostics if d.source == "verify-ptx"]
+
+
+def test_lint_warn_surfaces_findings_as_diagnostics():
+    from repro.core.driver import Compiler, Severity
+    with Compiler(jobs=0, lint="warn") as cc:
+        result = cc.compile(_corpus("width_mismatch.ptx"), cache=None)
+    assert "verify-ptx" in result.pass_times
+    [f] = result.findings
+    assert f.code == "width-mismatch"
+    [d] = [d for d in result.diagnostics if d.source == "verify-ptx"]
+    assert d.severity == Severity.WARNING
+    assert d.code == "width-mismatch"
+    assert d.location == "uid:2"
+    assert d.kernel == "width_mismatch"
+    assert result.lint_counters.get("lint_width_mismatch") == 1
+
+
+def test_lint_strict_escalates_warnings_to_errors():
+    from repro.core.driver import Compiler, Severity
+    with Compiler(jobs=0, lint="strict") as cc:
+        result = cc.compile(_corpus("width_mismatch.ptx"), cache=None)
+    [d] = [d for d in result.diagnostics if d.source == "verify-ptx"]
+    assert d.severity == Severity.ERROR
+    # NOTEs stay NOTEs even under strict
+    with Compiler(jobs=0, lint="strict") as cc:
+        branchy = cc.compile(BRANCHY_PTX, cache=None)
+    [d] = [d for d in branchy.diagnostics if d.source == "verify-ptx"]
+    assert d.severity == Severity.NOTE
+
+
+def test_lint_option_validated():
+    from repro.core.driver.options import CompilerOptions
+    with pytest.raises(ValueError):
+        CompilerOptions(lint="bogus")
+
+
+def test_diagnostics_dedupe_same_kernel_twice():
+    """The same kernel appearing twice in one module re-derives the
+    same coded diagnostic; the result carries it once."""
+    from repro.core.driver import Compiler
+
+    module_text = _corpus("width_mismatch.ptx") \
+        + _corpus("width_mismatch.ptx")
+    with Compiler(jobs=0, lint="warn") as cc:
+        result = cc.compile(module_text, cache=None)
+    assert len(result.reports) == 2
+    coded = [d for d in result.diagnostics if d.code == "width-mismatch"]
+    assert len(coded) == 1
+
+
+def test_dedupe_diagnostics_unit():
+    from repro.core.driver.result import (
+        Diagnostic, Severity, dedupe_diagnostics)
+    a = Diagnostic(Severity.WARNING, "m", kernel="k",
+                   code="c", location="uid:1")
+    b = Diagnostic(Severity.WARNING, "different message", kernel="k",
+                   code="c", location="uid:1")
+    c = Diagnostic(Severity.WARNING, "m", kernel="k",
+                   code="c", location="uid:2")
+    plain = Diagnostic(Severity.NOTE, "m")
+    out = dedupe_diagnostics([a, b, c, plain, plain])
+    assert out == [a, c, plain]
+
+
+def test_wire_form_roundtrips_findings():
+    from repro.core.driver import CompileResult, Compiler
+    with Compiler(jobs=0, lint="warn") as cc:
+        result = cc.compile(_corpus("shared_race.ptx"), cache=None)
+    back = CompileResult.from_json_dict(
+        json.loads(json.dumps(result.to_json_dict())))
+    assert [f.to_dict() for f in back.findings] \
+        == [f.to_dict() for f in result.findings]
+    [d] = [d for d in back.diagnostics if d.source == "verify-ptx"]
+    assert d.code == "shared-race" and d.location == "uid:6"
+    assert back.lint_counters == result.lint_counters
+
+
+def test_cached_recompile_keeps_findings():
+    """Findings ride the KernelReport, so a cache hit reproduces them."""
+    from repro.core.driver import Compiler
+    with Compiler(jobs=0, lint="warn") as cc:
+        first = cc.compile(_corpus("undef_use.ptx"))
+        second = cc.compile(_corpus("undef_use.ptx"))
+    assert second.cached
+    assert [f.to_dict() for f in second.findings] \
+        == [f.to_dict() for f in first.findings]
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_clean_corpus_exits_zero(capsys):
+    from repro.core.analysis.lint import main
+    assert main(["--corpus", "all", "--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "0 error(s), 0 warning(s), 0 note(s)" in out
+
+
+def test_cli_strict_fails_on_corpus_files(capsys):
+    from repro.core.analysis.lint import main
+    files = sorted(glob.glob(os.path.join(CORPUS_DIR, "*.ptx")))
+    assert main(["--strict", *files]) == 1
+    out = capsys.readouterr().out
+    assert "3 error(s), 2 warning(s)" in out
+    # default threshold (ERROR) also trips — three errors are planted
+    assert main(files) == 1
+
+
+def test_cli_json_output(capsys):
+    from repro.core.analysis.lint import main
+    path = os.path.join(CORPUS_DIR, "undef_use.ptx")
+    assert main(["--json", path]) == 1
+    payload = json.loads(capsys.readouterr().out)
+    assert payload[0]["code"] == "undef-use"
+    assert payload[0]["severity"] == "ERROR"
+
+
+# ---------------------------------------------------------------------------
+# POST /lint on the serving front-end
+# ---------------------------------------------------------------------------
+
+def test_service_lint_endpoint():
+    from repro.launch.ptx_service import PtxServiceClient, PtxServiceServer
+
+    with PtxServiceServer(port=0, jobs=0) as server:
+        server.start()
+        client = PtxServiceClient(server.host, server.port)
+        clean = client.lint(bench="jacobi")
+        assert clean["clean"] is True
+        assert clean["findings"] == [] and clean["n_kernels"] == 1
+
+        buggy = client.lint(ptx=_corpus("div_shfl.ptx"))
+        assert buggy["clean"] is False
+        assert [f["code"] for f in buggy["findings"]] == ["divergent-shfl"]
+        assert buggy["counts"]["lint_divergent_shfl"] == 1
+
+        stats = client.stats()
+        assert stats["requests"] == 2
+        assert stats["lint_counters"]["lint_divergent_shfl"] == 1
+        assert stats["lint_counters"]["lint_errors"] == 1
+        # lint_ keys never leak into the emulator section
+        assert not any(k.startswith("lint_")
+                       for k in stats["emulator_counters"])
+
+        with pytest.raises(RuntimeError, match="HTTP 400"):
+            client.lint(ptx="x", bench="jacobi")
+        with pytest.raises(RuntimeError, match="HTTP 400"):
+            client.lint(ptx="no kernels here")
