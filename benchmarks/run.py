@@ -8,15 +8,17 @@
   E7  roofline           dry-run roofline terms + hillclimb picks
   E8  calibrate          autotuned profile fits vs Table 1 (per gen)
   E9  serving_throughput HTTP service req/s + shared-disk-cache replica
+  E10 fleet_serving      multi-replica fleet: coalesce + remote cache
+                         tier + backpressure (repro.launch.fleet)
 
 Output: ``name,value,unit,derived`` CSV lines.
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only E1,E5]
 
 Snapshot mode (perf trajectory; see :mod:`benchmarks.snapshot`):
 
-  python -m benchmarks.run --snapshot                  # write BENCH_PR7.json
+  python -m benchmarks.run --snapshot                  # write BENCH_PR9.json
   python -m benchmarks.run --snapshot /tmp/now.json \
-                           --check BENCH_PR7.json      # CI perf smoke
+                           --check BENCH_PR9.json      # CI perf smoke
 
 Saturation smoke (the equality-saturation middle-end, PR 7):
 
@@ -33,14 +35,14 @@ import time
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list of E1,E2,E3,E4,E5,E7,E8,E9")
+                    help="comma list of E1,E2,E3,E4,E5,E7,E8,E9,E10")
     ap.add_argument("--jobs", type=int, default=None,
                     help="worker threads for per-kernel module compiles "
                          "(default: one per kernel, capped at CPU count)")
     ap.add_argument("--snapshot", nargs="?", const=None, default=False,
                     metavar="PATH",
                     help="write a schema-stamped perf snapshot (default "
-                         "path BENCH_PR7.json) instead of running suites")
+                         "path BENCH_PR9.json) instead of running suites")
     ap.add_argument("--check", default=None, metavar="BASELINE",
                     help="with --snapshot: compare against a committed "
                          "baseline JSON; counters exact, timings loose")
@@ -79,6 +81,8 @@ def main() -> None:
         # self-contained: owns its server sessions + a tmpdir cache_dir
         # (never the harness session — replica isolation is the point)
         "E9": ("serving_throughput", serving_throughput.run),
+        # likewise self-contained: boots its own cache tier + replicas
+        "E10": ("fleet_serving", serving_throughput.run_fleet),
     }
     selected = (args.only.split(",") if args.only else list(suites))
     print("name,value,unit,derived")

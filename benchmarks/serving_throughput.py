@@ -17,15 +17,30 @@ Three phases against one temporary ``cache_dir``:
 
 Emits throughput (req/s) per phase plus the two-tier cache counters,
 and fails if the replica re-emulated anything.
+
+**E10 — fleet serving** (:func:`measure_fleet` / :func:`run_fleet`):
+the multi-replica subsystem from :mod:`repro.launch.fleet` under load —
+a cold coalescing replica writing through to a network cache tier, a
+K-way coalesce burst (must cost exactly one compile), a warm replica
+with *no shared disk* served entirely through the remote tier, and a
+deliberately starved replica that must push back with 503s while an
+obeying client still gets every request served.  Latency percentiles
+come from the servers' own ``/stats`` histograms; the snapshot records
+them as the fleet point of the perf trajectory.
 """
 
 from __future__ import annotations
 
+import json
 import tempfile
+import threading
+import time
 
 from .common import emit
 
 BENCH_MIX = ("jacobi", "laplacian", "gradient", "vecadd")
+#: held out of BENCH_MIX so the coalesce burst hits a never-seen kernel
+COALESCE_BENCH = "divergence"
 REQUESTS = 24
 CLIENTS = 4
 
@@ -82,6 +97,114 @@ def measure() -> dict:
     return out
 
 
+def measure_fleet() -> dict:
+    """Run the fleet phases and return their raw numbers.
+
+    Shared by :func:`run_fleet` (CSV emission + pass/fail) and the
+    benchmark snapshot writer, which records req/s and the /stats
+    latency percentiles as the fleet point of the perf trajectory.
+    """
+    from repro.launch.fleet import CacheTierServer, FleetServer
+    from repro.launch.ptx_service import (
+        PtxServiceClient,
+        drive_requests as _drive,
+    )
+
+    out: dict = {"requests": REQUESTS, "clients": CLIENTS}
+    ok = True
+    plan = [BENCH_MIX[i % len(BENCH_MIX)] for i in range(REQUESTS)]
+    with CacheTierServer() as tier:
+        tier.start()
+
+        # phase 1: cold replica, writing through to the network tier
+        with FleetServer(remote_cache=tier.url, workers=CLIENTS,
+                         jobs=CLIENTS) as rep_a:
+            rep_a.start()
+            client = PtxServiceClient(rep_a.host, rep_a.port)
+            ok &= client.healthz()
+            cold_s = _drive(client, plan, CLIENTS)
+            out["cold_req_per_s"] = REQUESTS / cold_s
+
+            # phase 2: K concurrent identical requests for a bench this
+            # fleet has never compiled — the coalescer must make that
+            # exactly one cache miss (one emulation) and K byte-
+            # identical responses, no matter how the threads interleave
+            misses_before = client.stats()["cache"]["misses"]
+            payloads: list = []
+            errs: list = []
+            lock = threading.Lock()
+
+            def burst() -> None:
+                try:
+                    resp = client.compile(bench=COALESCE_BENCH)
+                    with lock:
+                        payloads.append(json.dumps(resp, sort_keys=True))
+                except BaseException as e:  # noqa: BLE001
+                    with lock:
+                        errs.append(e)
+
+            threads = [threading.Thread(target=burst)
+                       for _ in range(CLIENTS)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            out["coalesce_wall_s"] = time.perf_counter() - t0
+            if errs:
+                raise errs[0]
+            stats = client.stats()
+            out["coalesce_new_misses"] = \
+                stats["cache"]["misses"] - misses_before
+            out["coalesce_distinct_payloads"] = len(set(payloads))
+            out["coalesce_joined"] = stats["fleet"]["coalesce"]["joined"]
+            out["p50_ms"] = \
+                stats["fleet"]["latency"]["total"]["p50_s"] * 1e3
+            out["p99_ms"] = \
+                stats["fleet"]["latency"]["total"]["p99_s"] * 1e3
+            ok &= out["coalesce_new_misses"] == 1
+            ok &= out["coalesce_distinct_payloads"] == 1
+            ok &= stats["errors"] == 0
+
+        # phase 3: a fresh replica with NO shared disk — every kernel
+        # must arrive through the network tier with zero re-emulation
+        warm_plan = plan + [COALESCE_BENCH]
+        with FleetServer(remote_cache=tier.url, workers=CLIENTS,
+                         jobs=CLIENTS) as rep_b:
+            rep_b.start()
+            client = PtxServiceClient(rep_b.host, rep_b.port)
+            warm_s = _drive(client, warm_plan, CLIENTS)
+            out["warm_replica_req_per_s"] = len(warm_plan) / warm_s
+            stats = client.stats()
+            out["warm_remote_hits"] = stats["cache"]["remote_hits"]
+            out["warm_emulate_s"] = \
+                stats["pass_times"].get("emulate-flows", 0.0)
+            out["warm_p99_ms"] = \
+                stats["fleet"]["latency"]["total"]["p99_s"] * 1e3
+            ok &= out["warm_emulate_s"] == 0.0
+            ok &= out["warm_remote_hits"] == len(set(warm_plan))
+            ok &= stats["errors"] == 0
+
+        # phase 4: a starved replica (1 worker, 1 queue slot, cold
+        # compiles) must answer 503 + Retry-After under concurrent
+        # load; an obeying client still gets everything served
+        bp_plan = list(BENCH_MIX) * 2
+        with FleetServer(workers=1, jobs=1, queue_capacity=1,
+                         batch_max=1) as rep_c:
+            rep_c.start()
+            client = PtxServiceClient(rep_c.host, rep_c.port)
+            bp_s = _drive(client, bp_plan, CLIENTS,
+                          retry_backpressure=True)
+            out["backpressure_wall_s"] = bp_s
+            out["backpressure_503"] = client.counters["backpressure"]
+            queue = client.stats()["fleet"]["queue"]
+            out["backpressure_rejected"] = queue["rejected"]
+            ok &= out["backpressure_503"] >= 1
+        out["cache_server"] = tier.stats_payload()
+    out["ok"] = bool(ok)
+    return out
+
+
 def run() -> bool:
     m = measure()
     emit("serving.cold.req_per_s", m["cold_req_per_s"], "req/s",
@@ -101,5 +224,27 @@ def run() -> bool:
     return m["ok"]
 
 
+def run_fleet() -> bool:
+    m = measure_fleet()
+    emit("fleet.cold.req_per_s", m["cold_req_per_s"], "req/s",
+         f"{REQUESTS} reqs, {CLIENTS} clients, remote write-through")
+    emit("fleet.cold.p50_ms", m["p50_ms"], "ms", "/stats histogram")
+    emit("fleet.cold.p99_ms", m["p99_ms"], "ms", "/stats histogram")
+    emit("fleet.coalesce.new_misses", m["coalesce_new_misses"], "count",
+         f"MUST be 1: {CLIENTS} identical concurrent requests")
+    emit("fleet.coalesce.distinct_payloads",
+         m["coalesce_distinct_payloads"], "count",
+         "MUST be 1: coalesced responses are byte-identical")
+    emit("fleet.warm_replica.req_per_s", m["warm_replica_req_per_s"],
+         "req/s", "fresh replica, no disk, remote tier only")
+    emit("fleet.warm_replica.remote_hits", m["warm_remote_hits"],
+         "count", "one per distinct kernel")
+    emit("fleet.warm_replica.emulate_s", m["warm_emulate_s"], "s",
+         "MUST be 0: remote hits skip symbolic emulation")
+    emit("fleet.backpressure.rejected_503", m["backpressure_503"],
+         "count", "starved replica under concurrent load")
+    return m["ok"]
+
+
 if __name__ == "__main__":
-    raise SystemExit(0 if run() else 1)
+    raise SystemExit(0 if run() and run_fleet() else 1)

@@ -22,6 +22,10 @@ eyeballing CSV logs:
   either the corpus or the analyzer.
 * **e9_serving** — HTTP service throughput (cold / warm / replica
   phases) from :mod:`benchmarks.serving_throughput`.
+* **e10_fleet** — the fleet serving subsystem under load (coalesce /
+  remote-tier / backpressure phases plus /stats latency percentiles)
+  from :func:`benchmarks.serving_throughput.measure_fleet`; the
+  coalesce and remote-tier counts are exact invariants.
 * **machine_calib_s** — best-of wall time of a fixed pure-Python spin
   loop, recorded so ``--check`` can rescale a baseline captured on a
   different machine before applying its tolerance.
@@ -46,7 +50,7 @@ from typing import List, Optional
 
 SCHEMA = "repro-bench-snapshot"
 SCHEMA_VERSION = 1
-DEFAULT_PATH = "BENCH_PR8.json"
+DEFAULT_PATH = "BENCH_PR9.json"
 
 _SPIN_ITERS = 2_000_000
 
@@ -210,6 +214,24 @@ def measure_e9() -> dict:
     }
 
 
+def measure_e10() -> dict:
+    from . import serving_throughput
+    m = serving_throughput.measure_fleet()
+    return {
+        "cold_req_per_s": m["cold_req_per_s"],
+        "warm_replica_req_per_s": m["warm_replica_req_per_s"],
+        "p50_ms": m["p50_ms"],
+        "p99_ms": m["p99_ms"],
+        "warm_p99_ms": m["warm_p99_ms"],
+        "coalesce_new_misses": m["coalesce_new_misses"],
+        "coalesce_distinct_payloads": m["coalesce_distinct_payloads"],
+        "warm_remote_hits": m["warm_remote_hits"],
+        "warm_emulate_s": m["warm_emulate_s"],
+        "backpressure_503": m["backpressure_503"],
+        "ok": m["ok"],
+    }
+
+
 def take(serving: bool = True, repeat: int = 3) -> dict:
     """Measure everything and return the snapshot document."""
     snap = {
@@ -224,6 +246,7 @@ def take(serving: bool = True, repeat: int = 3) -> dict:
     }
     if serving:
         snap["e9_serving"] = measure_e9()
+        snap["e10_fleet"] = measure_e10()
     return snap
 
 
@@ -310,6 +333,18 @@ def check(current: dict, baseline: dict,
             if cur_warm.get(key) != base_warm.get(key):
                 fails.append(f"e1_warm.{key}: {cur_warm.get(key)} != "
                              f"baseline {base_warm.get(key)}")
+    cur_fleet, base_fleet = current.get("e10_fleet"), \
+        baseline.get("e10_fleet")
+    if cur_fleet and base_fleet:
+        # exact fleet invariants (the 503 count and throughputs are
+        # load-dependent and ride as loose/informational figures)
+        for key in ("coalesce_new_misses", "coalesce_distinct_payloads",
+                    "warm_remote_hits", "warm_emulate_s", "ok"):
+            if cur_fleet.get(key) != base_fleet.get(key):
+                fails.append(
+                    f"e10_fleet.{key}: {cur_fleet.get(key)} != baseline "
+                    f"{base_fleet.get(key)} (coalescing/remote-tier "
+                    "invariants are deterministic)")
 
     # --- loose: wall time within a machine-normalized budget ---------
     cur_calib = current.get("machine_calib_s") or 0.0
@@ -370,6 +405,22 @@ def run_snapshot(path: str, check_path: Optional[str] = None,
         emit("snapshot.e9.cold_req_per_s", e9["cold_req_per_s"], "req/s")
         emit("snapshot.e9.replica_req_per_s", e9["replica_req_per_s"],
              "req/s")
+    if "e10_fleet" in snap:
+        e10 = snap["e10_fleet"]
+        emit("snapshot.e10.cold_req_per_s", e10["cold_req_per_s"],
+             "req/s", "coalescing replica + remote write-through")
+        emit("snapshot.e10.warm_replica_req_per_s",
+             e10["warm_replica_req_per_s"], "req/s",
+             "served entirely through the network cache tier")
+        emit("snapshot.e10.p50_ms", e10["p50_ms"], "ms",
+             "/stats total-latency histogram, cold replica")
+        emit("snapshot.e10.p99_ms", e10["p99_ms"], "ms")
+        emit("snapshot.e10.coalesce_new_misses",
+             e10["coalesce_new_misses"], "count", "MUST be 1")
+        emit("snapshot.e10.warm_remote_hits", e10["warm_remote_hits"],
+             "count", "one per distinct kernel")
+        emit("snapshot.e10.backpressure_503", e10["backpressure_503"],
+             "count", "starved replica pushed back")
     emit("snapshot.written", path, "path")
 
     ok = True
@@ -382,4 +433,6 @@ def run_snapshot(path: str, check_path: Optional[str] = None,
         ok = not fails
     if "e9_serving" in snap:
         ok = ok and bool(snap["e9_serving"]["ok"])
+    if "e10_fleet" in snap:
+        ok = ok and bool(snap["e10_fleet"]["ok"])
     return ok

@@ -26,7 +26,7 @@ The legacy free functions (``repro.core.passes.compile_*``) and the
 ``ptxasw`` wrappers are thin shims over :func:`default_compiler`.
 """
 
-from .compiler import Compiler, default_compiler  # noqa: F401
+from .compiler import Compiler, PreparedSource, default_compiler  # noqa: F401
 from .options import CompilerOptions  # noqa: F401
 from .result import (  # noqa: F401
     CompileResult,
@@ -50,6 +50,7 @@ __all__ = [
     "DetectionSummary",
     "Diagnostic",
     "NormalizedSource",
+    "PreparedSource",
     "Severity",
     "Source",
     "SourceFrontend",

@@ -51,6 +51,25 @@ _CONSTRUCTION_ONLY = frozenset({"share_global_cache", "cache_entries",
 ConfigLike = Union[None, PipelineConfig, CompilerOptions]
 
 
+@dataclasses.dataclass(frozen=True)
+class PreparedSource:
+    """A normalized, option-resolved compile unit with its dedup key.
+
+    Produced by :meth:`Compiler.prepare`; executed by
+    :meth:`Compiler.compile_prepared` / :meth:`Compiler.submit_prepared`.
+    ``key`` is the batching identity — ``(printed module text, pipeline
+    cache token, pass-list override)`` — the same triple
+    :meth:`Compiler.compile_many` dedupes on and the serving fleet's
+    request coalescer joins concurrent HTTP requests on: two sources
+    with equal keys compile to byte-identical results.
+    """
+
+    key: Tuple[str, str, Optional[Tuple[str, ...]]]
+    ns: NormalizedSource
+    opts: CompilerOptions
+    diags: Tuple[Diagnostic, ...]
+
+
 def _with_verify(passes: Sequence[str]) -> Tuple[str, ...]:
     """Insert ``verify-ptx`` after ``emulate-flows`` (the linter's race
     detector reuses the memoized flows) or, absent that, at the front."""
@@ -495,6 +514,42 @@ class Compiler:
         return self._pool().submit(self.compile, src, config,
                                    cache=cache, **overrides)
 
+    def prepare(self, src: Source, config: ConfigLike = None,
+                **overrides) -> PreparedSource:
+        """Normalize + resolve one source without compiling it.
+
+        The returned :class:`PreparedSource` carries the batching
+        ``key`` (module text, cache token, pass list): callers that
+        need to decide *whether* to compile — the fleet front-end's
+        request coalescer, admission control — key on it, then hand
+        the prepared unit to :meth:`compile_prepared` /
+        :meth:`submit_prepared`.  Raises the same ``ValueError`` /
+        ``TypeError`` family as :meth:`compile` on bad sources or
+        options, so validation cost (and blame) stays with the caller.
+        """
+        ns = normalize_source(src)
+        opts, diags = self._resolve(config, overrides, ns)
+        key = (print_module(ns.module),
+               opts.pipeline_config().cache_token(),
+               opts.passes)
+        return PreparedSource(key=key, ns=ns, opts=opts,
+                              diags=tuple(diags))
+
+    def compile_prepared(self, prepared: PreparedSource, *,
+                         cache=_SESSION_CACHE,
+                         analysis_only: bool = False) -> CompileResult:
+        """Run a :meth:`prepare`-d unit through the middle-end."""
+        return self._run(prepared.ns, prepared.opts,
+                         self._pick_cache(cache), list(prepared.diags),
+                         analysis_only=analysis_only)
+
+    def submit_prepared(self, prepared: PreparedSource, *,
+                        cache=_SESSION_CACHE, analysis_only: bool = False
+                        ) -> "concurrent.futures.Future[CompileResult]":
+        """Asynchronous :meth:`compile_prepared` on the session pool."""
+        return self._pool().submit(self.compile_prepared, prepared,
+                                   cache=cache, analysis_only=analysis_only)
+
     def compile_many(self, srcs: Sequence[Source],
                      config: ConfigLike = None, *,
                      cache=_SESSION_CACHE, **overrides
@@ -513,14 +568,7 @@ class Compiler:
         srcs = list(srcs)
 
         def prep(src):
-            ns = normalize_source(src)
-            opts, diags = self._resolve(config, overrides, ns)
-            # the dedup key is only worth printing when there is a cache
-            # to serve duplicates through
-            key = (print_module(ns.module),
-                   opts.pipeline_config().cache_token(),
-                   opts.passes) if the_cache is not None else None
-            return (key, ns, opts, diags)
+            return self.prepare(src, config, **overrides)
 
         # normalization (frontend lowering) and key printing are per-
         # source and independent, so they fan out too instead of running
@@ -528,19 +576,19 @@ class Compiler:
         prepared = list(self._pool().map(prep, srcs)) if len(srcs) > 1 \
             else [prep(src) for src in srcs]
 
-        def run_one(item) -> CompileResult:
-            _, ns, opts, diags = item
-            return self._run(ns, opts, the_cache, diags,
-                             analysis_only=False)
+        def run_one(item: PreparedSource) -> CompileResult:
+            return self.compile_prepared(item, cache=cache)
 
         if the_cache is None or len(prepared) <= 1:
+            # no cache to serve duplicates through: every source
+            # compiles independently
             distinct = prepared
         else:
             seen = set()
             distinct = []
             for item in prepared:
-                if item[0] not in seen:
-                    seen.add(item[0])
+                if item.key not in seen:
+                    seen.add(item.key)
                     distinct.append(item)
         if len(distinct) > 1:
             first_pass = dict(zip(

@@ -54,6 +54,17 @@ SCHEMA_VERSION = 2
 _TMP_DIR = "tmp"
 
 
+def entry_digest(key: str) -> str:
+    """Storage name for a :meth:`CompileCache.key` content hash.
+
+    Shared by the disk tier (directory name) and the remote tier (URL
+    path): the schema version participates in the *hashed* name, so a
+    format bump makes every stale entry miss cleanly in both tiers
+    instead of failing to deserialize.
+    """
+    return hashlib.sha256(f"{SCHEMA_VERSION}:{key}".encode()).hexdigest()
+
+
 class DiskCache:
     """Content-addressed on-disk store of (kernel PTX, pickled report).
 
@@ -83,8 +94,7 @@ class DiskCache:
     # ------------------------------------------------------------------
     def path_for(self, key: str) -> Path:
         """Entry directory for a :meth:`CompileCache.key` content hash."""
-        digest = hashlib.sha256(
-            f"{SCHEMA_VERSION}:{key}".encode()).hexdigest()
+        digest = entry_digest(key)
         return self.root / digest[:2] / digest
 
     # ------------------------------------------------------------------

@@ -61,11 +61,16 @@ import json
 import random
 import threading
 import time
-from http.client import HTTPConnection
+from http.client import BadStatusLine, HTTPConnection
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, List, Optional, Sequence
 
 DEFAULT_BENCHES = ("jacobi,laplacian,gradient,divergence,vecadd,wave13pt")
+
+#: largest request body accepted before answering 413 (a compile
+#: request is PTX text plus options; real kernels are kilobytes —
+#: anything beyond this is a mistake or a memory-exhaustion attempt)
+DEFAULT_MAX_BODY_BYTES = 8 * 1024 * 1024
 
 
 # ---------------------------------------------------------------------------
@@ -100,11 +105,17 @@ def parse_bench_list(spec: str) -> List[str]:
 # ---------------------------------------------------------------------------
 
 class _ServiceError(Exception):
-    """A client-visible request failure (HTTP status + message)."""
+    """A client-visible request failure (HTTP status + message).
 
-    def __init__(self, status: int, message: str) -> None:
+    ``headers`` ride onto the error response — the backpressure path
+    uses it for ``Retry-After`` on 503.
+    """
+
+    def __init__(self, status: int, message: str,
+                 headers: Optional[Dict[str, str]] = None) -> None:
         super().__init__(message)
         self.status = status
+        self.headers = headers or {}
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -119,11 +130,14 @@ class _Handler(BaseHTTPRequestHandler):
         if self.service.verbose:
             super().log_message(fmt, *args)
 
-    def _send_json(self, status: int, payload: Dict) -> None:
+    def _send_json(self, status: int, payload: Dict,
+                   headers: Optional[Dict[str, str]] = None) -> None:
         body = json.dumps(payload).encode()
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        for name, value in (headers or {}).items():
+            self.send_header(name, value)
         self.end_headers()
         self.wfile.write(body)
 
@@ -145,7 +159,21 @@ class _Handler(BaseHTTPRequestHandler):
                                            " try /compile, /lint"})
             return
         try:
-            length = int(self.headers.get("Content-Length") or 0)
+            try:
+                length = int(self.headers.get("Content-Length") or 0)
+            except ValueError:
+                raise _ServiceError(400, "Content-Length is not an integer")
+            if length < 0:
+                raise _ServiceError(400, "Content-Length is negative")
+            if length > self.service.max_body_bytes:
+                # refuse *before* buffering: reading an arbitrary body
+                # into memory is exactly the attack this cap prevents —
+                # and since the body stays unread, the connection cannot
+                # be reused
+                self.close_connection = True
+                raise _ServiceError(
+                    413, f"request body of {length} bytes exceeds the "
+                         f"{self.service.max_body_bytes}-byte limit")
             try:
                 payload = json.loads(self.rfile.read(length) or b"{}")
             except json.JSONDecodeError as e:
@@ -153,7 +181,7 @@ class _Handler(BaseHTTPRequestHandler):
             result = handler(payload)
         except _ServiceError as e:
             self.service.count_error()
-            self._send_json(e.status, {"error": str(e)})
+            self._send_json(e.status, {"error": str(e)}, headers=e.headers)
         except Exception as e:  # noqa: BLE001 — a request must not kill us
             self.service.count_error()
             self._send_json(500, {"error": f"{type(e).__name__}: {e}"})
@@ -172,14 +200,36 @@ class PtxServiceServer:
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
                  compiler=None, cache_dir: Optional[str] = None,
+                 remote_cache: Optional[str] = None,
                  jobs: Optional[int] = None, selection: str = "all",
+                 max_body_bytes: int = DEFAULT_MAX_BODY_BYTES,
                  verbose: bool = False) -> None:
         from repro.core.driver import Compiler
 
         self.verbose = verbose
+        self.max_body_bytes = max_body_bytes
         self._owns_compiler = compiler is None
-        self.compiler = compiler if compiler is not None else Compiler(
-            jobs=jobs, selection=selection, cache_dir=cache_dir)
+        if compiler is not None:
+            if cache_dir is not None or remote_cache is not None:
+                raise ValueError(
+                    "pass either compiler= or cache_dir=/remote_cache=, "
+                    "not both — the cache tiers belong to the session")
+            self.compiler = compiler
+        elif remote_cache is not None:
+            # tiered fleet cache: memory -> disk (optional) -> remote.
+            # Built here rather than inside Compiler so the core stays
+            # ignorant of the serving subsystem's network tier.
+            from repro.core.passes.cache import CompileCache
+            from repro.core.passes.diskcache import DiskCache
+            from repro.launch.fleet.remote_cache import RemoteCache
+            tiered = CompileCache(
+                disk=DiskCache(cache_dir) if cache_dir is not None else None,
+                remote=RemoteCache(remote_cache))
+            self.compiler = Compiler(jobs=jobs, selection=selection,
+                                     cache=tiered)
+        else:
+            self.compiler = Compiler(jobs=jobs, selection=selection,
+                                     cache_dir=cache_dir)
         self._httpd = ThreadingHTTPServer((host, port), _Handler)
         self._httpd.daemon_threads = True
         self._httpd.service = self          # type: ignore[attr-defined]
@@ -211,7 +261,9 @@ class PtxServiceServer:
         self._serving = True
         self._httpd.serve_forever()
 
-    def close(self) -> None:
+    def _shutdown_http(self) -> None:
+        """Stop accepting connections (the first half of ``close``;
+        the fleet subclass drains its queue between the two halves)."""
         # shutdown() blocks on an event only serve_forever() sets, so
         # calling it on a server whose loop never ran would hang forever
         # (e.g. a `with` body that raises before start())
@@ -222,6 +274,9 @@ class PtxServiceServer:
         if self._thread is not None:
             self._thread.join(timeout=10)
             self._thread = None
+
+    def close(self) -> None:
+        self._shutdown_http()
         if self._owns_compiler:
             self.compiler.close()
 
@@ -341,6 +396,8 @@ class PtxServiceServer:
     def stats_payload(self) -> Dict:
         cc = self.compiler
         disk = cc.cache.disk if cc.cache is not None else None
+        remote = getattr(cc.cache, "remote", None) \
+            if cc.cache is not None else None
         with self._stats_lock:
             requests, errors = self._requests, self._errors
             lint_totals = dict(self._lint_totals)
@@ -363,6 +420,13 @@ class PtxServiceServer:
                 "approx_bytes": disk.approx_bytes,
                 "max_bytes": disk.max_bytes,
             },
+            # client-side counters of the network tier (gets/hits/
+            # misses/puts/errors); the cache server's own totals live
+            # on its /stats endpoint
+            "remote": None if remote is None else {
+                "url": getattr(remote, "url", None),
+                **getattr(remote, "counters", {}),
+            },
             "pass_times": {k: round(v, 6)
                            for k, v in cc.pass_times.items()},
             # session-aggregated per-kernel report counters: the PR 6
@@ -383,26 +447,81 @@ class PtxServiceServer:
 # client
 # ---------------------------------------------------------------------------
 
+class BackpressureError(RuntimeError):
+    """The service answered 503: its bounded queue is full.
+
+    ``retry_after`` carries the server's ``Retry-After`` hint in
+    seconds — callers back off that long and retry instead of piling
+    on (the fleet drivers do exactly that).
+    """
+
+    def __init__(self, message: str, retry_after: float = 1.0) -> None:
+        super().__init__(message)
+        self.retry_after = retry_after
+
+
+#: transport failures that are safe to retry: the request either never
+#: reached the server or the connection died before/while the response
+#: travelled.  GETs are read-only and POST /compile is content-
+#: addressed (recompiling the same source is idempotent by
+#: construction), so a duplicate delivery costs a cache hit, not a
+#: wrong answer.
+_RETRYABLE = (ConnectionRefusedError, ConnectionResetError,
+              BrokenPipeError, BadStatusLine, TimeoutError)
+
+
 class PtxServiceClient:
-    """Minimal stdlib client for the service endpoints."""
+    """Minimal stdlib client for the service endpoints.
+
+    Transport errors are retried up to ``retries`` times with jittered
+    exponential backoff (see ``_RETRYABLE`` for the rationale); HTTP
+    error *responses* are never retried here — 503 surfaces as
+    :class:`BackpressureError` with the server's ``Retry-After`` so the
+    caller owns the pacing decision.  ``counters`` tallies what the
+    transport did (``requests`` / ``retries`` / ``backpressure``).
+    """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 8080,
-                 timeout: float = 300.0) -> None:
+                 timeout: float = 300.0, *, retries: int = 2,
+                 backoff_s: float = 0.05,
+                 rng: Optional[random.Random] = None) -> None:
         self.host = host
         self.port = port
         self.timeout = timeout
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self._rng = rng if rng is not None else random.Random()
+        self._counter_lock = threading.Lock()
+        self._counters = {"requests": 0, "retries": 0, "backpressure": 0}
 
-    def _request(self, method: str, path: str,
-                 payload: Optional[Dict] = None) -> Dict:
+    @property
+    def counters(self) -> Dict[str, int]:
+        with self._counter_lock:
+            return dict(self._counters)
+
+    def _count(self, name: str) -> None:
+        with self._counter_lock:
+            self._counters[name] += 1
+
+    def _request_once(self, method: str, path: str,
+                      body: Optional[bytes]) -> Dict:
         conn = HTTPConnection(self.host, self.port, timeout=self.timeout)
         try:
-            body = json.dumps(payload).encode() if payload is not None \
-                else None
             conn.request(method, path, body=body,
                          headers={"Content-Type": "application/json"}
                          if body else {})
             resp = conn.getresponse()
             data = json.loads(resp.read() or b"{}")
+            if resp.status == 503:
+                self._count("backpressure")
+                try:
+                    retry_after = float(
+                        resp.getheader("Retry-After") or 1.0)
+                except ValueError:
+                    retry_after = 1.0
+                raise BackpressureError(
+                    f"{method} {path} -> HTTP 503: "
+                    f"{data.get('error', data)}", retry_after=retry_after)
             if resp.status != 200:
                 raise RuntimeError(
                     f"{method} {path} -> HTTP {resp.status}: "
@@ -410,6 +529,32 @@ class PtxServiceClient:
             return data
         finally:
             conn.close()
+
+    def _request(self, method: str, path: str,
+                 payload: Optional[Dict] = None) -> Dict:
+        self._count("requests")
+        body = json.dumps(payload).encode() if payload is not None else None
+        attempt = 0
+        while True:
+            try:
+                return self._request_once(method, path, body)
+            except _RETRYABLE as e:
+                # a timed-out POST may have been *executed* server-side;
+                # /compile and /lint are pure functions of their body
+                # (content-addressed / read-only) so replaying is safe —
+                # any other POST path must not be replayed blind
+                replayable = method != "POST" \
+                    or path in ("/compile", "/lint") \
+                    or not isinstance(e, TimeoutError)
+                if attempt >= self.retries or not replayable:
+                    raise
+                # full jitter: sleep U(0, backoff · 2^attempt) so a
+                # thundering herd of clients retrying a restarted
+                # replica spreads out instead of re-colliding
+                time.sleep(self._rng.uniform(
+                    0, self.backoff_s * (2 ** attempt)))
+                attempt += 1
+                self._count("retries")
 
     def compile(self, ptx: Optional[str] = None,
                 bench: Optional[str] = None, **options) -> Dict:
@@ -455,10 +600,14 @@ class PtxServiceClient:
 # ---------------------------------------------------------------------------
 
 def drive_requests(client: PtxServiceClient, plan: Sequence[str],
-                   clients: int) -> float:
+                   clients: int, *,
+                   retry_backpressure: bool = False) -> float:
     """Serve every bench name in ``plan`` through ``clients`` concurrent
     client threads; returns wall seconds.  The first worker failure is
-    re-raised (shared by the ``--bench`` CLI and benchmark suite E9)."""
+    re-raised (shared by the ``--bench`` CLI and benchmark suite E9).
+    With ``retry_backpressure`` a 503 is obeyed (sleep ``Retry-After``,
+    resubmit) instead of failing the run — the fleet load drivers use
+    this to measure a saturated-but-correct server."""
     errors: List[BaseException] = []
     lock = threading.Lock()
     queue = list(plan)
@@ -472,7 +621,14 @@ def drive_requests(client: PtxServiceClient, plan: Sequence[str],
                     return
                 name = queue.pop()
             try:
-                resp = client.compile(bench=name)
+                while True:
+                    try:
+                        resp = client.compile(bench=name)
+                        break
+                    except BackpressureError as e:
+                        if not retry_backpressure:
+                            raise
+                        time.sleep(e.retry_after)
                 assert resp["reports"][0]["name"] == name
                 with lock:
                     served += 1
@@ -528,8 +684,11 @@ def _bench_mode(args) -> dict:
 
 def _serve_mode(args) -> None:
     server = PtxServiceServer(host=args.host, port=args.port,
-                              cache_dir=args.cache_dir, jobs=args.jobs,
-                              selection=args.selection, verbose=True)
+                              cache_dir=args.cache_dir,
+                              remote_cache=args.remote_cache,
+                              jobs=args.jobs, selection=args.selection,
+                              max_body_bytes=args.max_body_bytes,
+                              verbose=True)
     print(f"ptx_service listening on http://{server.host}:{server.port} "
           f"(cache_dir={args.cache_dir or 'off'})")
     try:
@@ -635,6 +794,13 @@ def main(argv: Optional[Sequence[str]] = None):
     ap.add_argument("--cache-dir", default=None,
                     help="directory of the shared disk cache tier "
                          "(replica fleets point every process here)")
+    ap.add_argument("--remote-cache", default=None, metavar="URL",
+                    help="http://host:port of a fleet cache server "
+                         "(network tier below disk; see "
+                         "repro.launch.fleet)")
+    ap.add_argument("--max-body-bytes", type=int,
+                    default=DEFAULT_MAX_BODY_BYTES,
+                    help="largest request body accepted before 413")
     ap.add_argument("--expect-warm-disk", action="store_true",
                     help="assert every kernel came from the disk tier "
                          "with zero emulations (two-process smoke)")

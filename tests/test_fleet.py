@@ -1,0 +1,430 @@
+"""Fleet serving subsystem tests.
+
+Covers the pieces in isolation (histogram, bounded queue, coalescer,
+wire form, cache tier server) and the integrated contracts the fleet
+smoke asserts at scale: the coalescer hammer (K concurrent identical
+requests -> exactly one compile, K byte-identical responses), the
+remote cache tier across two replicas (zero re-emulations on the warm
+one), deterministic backpressure (503 + Retry-After), and per-request
+deadlines (504)."""
+
+import dataclasses
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core.driver import Compiler
+from repro.core.frontend.kernelgen import get_bench
+from repro.core.frontend.stencil import lower_to_ptx
+from repro.core.passes.cache import CompileCache
+from repro.core.ptx import print_kernel
+from repro.core.ptx.parser import parse
+from repro.launch.fleet import (
+    CacheTierServer,
+    FleetServer,
+    Flight,
+    FlightTimeout,
+    Job,
+    JobQueue,
+    LatencyHistogram,
+    QueueClosed,
+    QueueFull,
+    RemoteCache,
+    RequestCoalescer,
+)
+from repro.launch.fleet.remote_cache import decode_entry, encode_entry
+from repro.launch.ptx_service import BackpressureError, PtxServiceClient
+
+
+def _vecadd_kernel():
+    return lower_to_ptx(get_bench("vecadd").program)
+
+
+@dataclasses.dataclass
+class FakeReport:
+    name: str
+    cached: bool = False
+
+
+def _poll(predicate, timeout=30.0, what="condition"):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if predicate():
+            return
+        time.sleep(0.01)
+    pytest.fail(f"timed out waiting for {what}")
+
+
+# ---------------------------------------------------------------------------
+# latency histogram
+# ---------------------------------------------------------------------------
+
+def test_histogram_empty_and_shape():
+    h = LatencyHistogram()
+    d = h.to_dict()
+    assert d["count"] == 0 and d["p99_s"] == 0.0 and d["max_s"] == 0.0
+
+
+def test_histogram_percentiles_bound_the_samples():
+    h = LatencyHistogram()
+    for ms in (1, 1, 1, 1, 1, 1, 1, 1, 1, 100):
+        h.record(ms / 1000.0)
+    # p50 must bucket near 1ms, p99 near the 100ms outlier
+    assert h.percentile(50) <= 0.01
+    assert h.percentile(99) >= 0.1
+    assert h.to_dict()["max_s"] == pytest.approx(0.1)
+    h.record(-5.0)                       # clock weirdness: clamps, no throw
+    assert h.count == 11
+
+
+# ---------------------------------------------------------------------------
+# bounded queue
+# ---------------------------------------------------------------------------
+
+def _job(deadline=None):
+    return Job(prepared=None, flight=None, deadline=deadline)
+
+
+def test_queue_fifo_backpressure_and_counters():
+    q = JobQueue(capacity=2)
+    a, b = _job(), _job()
+    q.put(a)
+    q.put(b)
+    with pytest.raises(QueueFull):
+        q.put(_job())
+    batch = q.take_batch(max_items=8, window_s=0.0)
+    assert batch[0] is a and batch[1] is b        # FIFO, burst collected
+    c = q.counters()
+    assert c["enqueued"] == 2 and c["rejected"] == 1
+    assert c["max_depth"] == 2 and c["depth"] == 0
+
+
+def test_queue_close_refuses_then_drains():
+    q = JobQueue(capacity=4)
+    q.put(_job())
+    q.close()
+    with pytest.raises(QueueClosed):
+        q.put(_job())
+    assert len(q.take_batch()) == 1               # drain continues...
+    assert q.take_batch() is None                 # ...then signals exit
+
+
+def test_queue_batch_window_collects_late_arrivals():
+    q = JobQueue(capacity=8)
+    q.put(_job())
+    got = []
+    t = threading.Thread(
+        target=lambda: got.append(q.take_batch(max_items=4, window_s=2.0)))
+    t.start()
+    time.sleep(0.05)
+    q.put(_job())
+    q.put(_job())
+    q.close()                   # close also ends the lingering window
+    t.join(timeout=10)
+    assert not t.is_alive() and len(got[0]) >= 1
+
+
+def test_job_deadline():
+    now = time.monotonic()
+    assert not _job().expired()                   # no deadline: immortal
+    assert _job(deadline=now - 1).expired()
+    assert not _job(deadline=now + 60).expired()
+
+
+# ---------------------------------------------------------------------------
+# coalescer
+# ---------------------------------------------------------------------------
+
+def test_coalescer_join_resolve_and_window_close():
+    co = RequestCoalescer()
+    f1, created = co.join("k")
+    assert created and f1.n_waiters == 1
+    f2, created2 = co.join("k")
+    assert f2 is f1 and not created2 and f1.n_waiters == 2
+    co.finish(f1)                                 # window closed...
+    f3, created3 = co.join("k")
+    assert created3 and f3 is not f1              # ...fresh flight after
+    f1.resolve({"x": 1})
+    assert f1.wait(1.0) == {"x": 1}
+    c = co.counters()
+    assert c["flights"] == 2 and c["joined"] == 1 and c["open"] == 1
+
+
+def test_flight_failure_reaches_every_waiter():
+    co = RequestCoalescer()
+    f, _ = co.join("k")
+    co.join("k")
+    results = []
+    threads = [threading.Thread(
+        target=lambda: results.append(pytest.raises(ValueError, f.wait, 5.0)))
+        for _ in range(2)]
+    for t in threads:
+        t.start()
+    co.abandon(f, ValueError("boom"))
+    for t in threads:
+        t.join(timeout=10)
+    assert len(results) == 2
+    assert co.counters()["abandoned"] == 1 and co.counters()["open"] == 0
+
+
+def test_flight_wait_timeout():
+    f = Flight("k")
+    with pytest.raises(FlightTimeout):
+        f.wait(0.01)
+
+
+# ---------------------------------------------------------------------------
+# wire form + cache tier server
+# ---------------------------------------------------------------------------
+
+def test_entry_wire_roundtrip():
+    kernel = _vecadd_kernel()
+    blob = encode_entry("some-key", kernel, FakeReport("vecadd", cached=True))
+    loaded = decode_entry(blob)
+    assert loaded is not None
+    k2, r2 = loaded
+    assert print_kernel(k2) == print_kernel(kernel)
+    assert r2.name == "vecadd"
+    assert r2.cached is False, "wire form stores the pristine report"
+
+
+def test_decode_rejects_corruption_and_schema_drift():
+    kernel = _vecadd_kernel()
+    blob = encode_entry("k", kernel, FakeReport("vecadd"))
+    assert decode_entry(b"not json at all") is None
+    drifted = json.loads(blob)
+    drifted["schema"] = -1
+    assert decode_entry(json.dumps(drifted).encode()) is None
+    corrupt = json.loads(blob)
+    corrupt["report_b64"] = "AAAA"
+    assert decode_entry(json.dumps(corrupt).encode()) is None
+
+
+def test_cache_tier_server_lru_by_bytes():
+    srv = CacheTierServer(max_bytes=100)
+    srv.put("a" * 64, b"x" * 60)
+    srv.put("b" * 64, b"y" * 60)                  # evicts a (120 > 100)
+    assert srv.get("a" * 64) is None
+    assert srv.get("b" * 64) == b"y" * 60
+    st = srv.stats_payload()
+    assert st["evictions"] == 1 and st["entries"] == 1
+    assert st["gets"] == 2 and st["hits"] == 1
+
+
+def test_remote_cache_http_roundtrip_and_counters():
+    kernel = _vecadd_kernel()
+    with CacheTierServer() as tier:
+        tier.start()
+        rc = RemoteCache(tier.url)
+        assert rc.healthz()
+        assert rc.load("k1") is None              # cold: miss
+        rc.store("k1", kernel, FakeReport("vecadd"))
+        loaded = rc.load("k1")
+        assert loaded is not None
+        assert print_kernel(loaded[0]) == print_kernel(kernel)
+        assert rc.counters == {"gets": 2, "hits": 1, "misses": 1,
+                               "puts": 1, "errors": 0}
+        assert rc.server_stats()["entries"] == 1
+
+
+def test_remote_cache_dead_server_degrades_to_miss():
+    rc = RemoteCache("http://127.0.0.1:9", timeout=0.2)  # nothing there
+    assert rc.load("k") is None
+    assert rc.store("k", _vecadd_kernel(), FakeReport("v")) == 0
+    assert rc.healthz() is False
+    c = rc.counters
+    assert c["errors"] == 2 and c["misses"] == 1 and c["puts"] == 0
+
+
+def test_remote_cache_url_validation():
+    with pytest.raises(ValueError, match="http"):
+        RemoteCache("https://example.com:443")
+    with pytest.raises(ValueError, match="host and port"):
+        RemoteCache("http://nohost")
+    assert RemoteCache("127.0.0.1:8790").port == 8790  # bare host:port ok
+
+
+# ---------------------------------------------------------------------------
+# CompileCache remote tier (no HTTP: a dict-backed fake)
+# ---------------------------------------------------------------------------
+
+class DictRemote:
+    """In-memory stand-in with the tier interface."""
+
+    def __init__(self):
+        self.blobs = {}
+
+    def store(self, key, kernel, report):
+        self.blobs[key] = encode_entry(key, kernel, report)
+        return 0
+
+    def load(self, key):
+        blob = self.blobs.get(key)
+        return None if blob is None else decode_entry(blob)
+
+
+def test_compile_cache_remote_tier_write_through_and_warm_hit():
+    remote = DictRemote()
+    with Compiler(jobs=1, cache=CompileCache(remote=remote)) as c1:
+        c1.compile(get_bench("vecadd"))
+    assert len(remote.blobs) == 1, "put must write through to the remote"
+
+    with Compiler(jobs=1, cache=CompileCache(remote=remote)) as c2:
+        res = c2.compile(get_bench("vecadd"))
+        stats = c2.cache_stats
+        assert stats.remote_hits == 1 and stats.misses == 1
+        assert res.reports[0].cached
+        assert "emulate-flows" not in c2.pass_times, \
+            "a remote hit must skip symbolic emulation entirely"
+
+
+# ---------------------------------------------------------------------------
+# FleetServer integration
+# ---------------------------------------------------------------------------
+
+def _gate_compiles(server):
+    """Replace the server compiler's ``submit_prepared`` with a gated
+    wrapper: workers block until ``release.set()``, and every submit is
+    recorded.  Makes coalescing/backpressure windows deterministic."""
+    release = threading.Event()
+    calls = []
+    orig = server.compiler.submit_prepared
+
+    def gated(prepared):
+        calls.append(prepared.key)
+        assert release.wait(60), "test gate never released"
+        return orig(prepared)
+
+    server.compiler.submit_prepared = gated
+    return release, calls
+
+
+def test_coalescer_hammer_one_compile_k_identical_responses():
+    k = 6
+    with FleetServer(workers=1, jobs=2) as srv:
+        srv.start()
+        release, calls = _gate_compiles(srv)
+        client = PtxServiceClient(srv.host, srv.port)
+        payloads, errors = [], []
+        lock = threading.Lock()
+
+        def hammer():
+            try:
+                resp = client.compile(bench="vecadd")
+                with lock:
+                    payloads.append(json.dumps(resp, sort_keys=True))
+            except BaseException as e:  # noqa: BLE001
+                with lock:
+                    errors.append(e)
+
+        threads = [threading.Thread(target=hammer) for _ in range(k)]
+        for t in threads:
+            t.start()
+        try:
+            # all K requests are in the building before any compile runs
+            _poll(lambda: srv.coalescer.counters()["joined"] == k - 1,
+                  what=f"{k - 1} joins (got {srv.coalescer.counters()})")
+            assert len(calls) <= 1
+        finally:
+            release.set()
+        for t in threads:
+            t.join(timeout=60)
+        assert not errors, errors[0]
+        assert len(calls) == 1, "exactly one compile for K identical reqs"
+        assert len(set(payloads)) == 1 and len(payloads) == k, \
+            "coalesced responses must be byte-identical"
+        st = srv.stats_payload()
+        assert st["cache"]["misses"] == 1
+        assert st["fleet"]["coalesce"]["joined"] == k - 1
+        assert st["fleet"]["latency"]["total"]["count"] == k
+
+
+def test_two_replicas_share_the_remote_tier():
+    with CacheTierServer() as tier:
+        tier.start()
+        with FleetServer(remote_cache=tier.url, workers=2, jobs=2) as a:
+            a.start()
+            ca = PtxServiceClient(a.host, a.port)
+            cold = ca.compile(bench="jacobi")
+        with FleetServer(remote_cache=tier.url, workers=2, jobs=2) as b:
+            b.start()
+            cb = PtxServiceClient(b.host, b.port)
+            warm = cb.compile(bench="jacobi")
+            st = cb.stats()
+        assert warm["ptx"] == cold["ptx"], \
+            "the network tier must serve byte-identical PTX"
+        assert st["cache"]["remote_hits"] == 1
+        assert st["pass_times"].get("emulate-flows", 0.0) == 0.0, \
+            "warm replica must not re-emulate"
+        assert st["remote"]["hits"] == 1 and st["remote"]["url"] == tier.url
+        assert tier.stats_payload()["hits"] == 1
+
+
+def test_backpressure_503_with_retry_after_hint():
+    with FleetServer(workers=1, jobs=1, queue_capacity=1,
+                     batch_max=1) as srv:
+        srv.start()
+        release, calls = _gate_compiles(srv)
+        client = PtxServiceClient(srv.host, srv.port)
+        done = []
+
+        def post(name):
+            done.append(client.compile(bench=name))
+
+        t1 = threading.Thread(target=post, args=("vecadd",))
+        t1.start()
+        _poll(lambda: len(calls) == 1, what="worker holding job 1")
+        t2 = threading.Thread(target=post, args=("jacobi",))
+        t2.start()
+        _poll(lambda: srv.queue.depth == 1, what="job 2 queued")
+        try:
+            with pytest.raises(BackpressureError) as exc:
+                client.compile(bench="laplacian")    # queue full: 503
+            assert exc.value.retry_after >= 1
+            assert client.counters["backpressure"] == 1
+            assert srv.queue.counters()["rejected"] == 1
+        finally:
+            release.set()
+        t1.join(timeout=60)
+        t2.join(timeout=60)
+        assert len(done) == 2, "obeying the 503 must not lose the others"
+
+
+def test_deadline_times_out_both_in_flight_and_in_queue():
+    with FleetServer(workers=1, jobs=1, queue_capacity=4, batch_max=1,
+                     deadline_s=0.3) as srv:
+        srv.start()
+        release, calls = _gate_compiles(srv)
+        client = PtxServiceClient(srv.host, srv.port)
+        errors = []
+
+        def post(name):
+            try:
+                client.compile(bench=name)
+            except RuntimeError as e:
+                errors.append(str(e))
+
+        t1 = threading.Thread(target=post, args=("vecadd",))
+        t1.start()
+        _poll(lambda: len(calls) == 1, what="worker holding job 1")
+        t2 = threading.Thread(target=post, args=("jacobi",))
+        t2.start()
+        t1.join(timeout=60)
+        t2.join(timeout=60)
+        # both clients saw 504: one timed out mid-compile, one in queue
+        assert len(errors) == 2 and all("504" in e for e in errors), errors
+        release.set()
+        # the worker must skip the expired queued job, not compile it
+        _poll(lambda: srv.queue.counters()["expired"] == 1,
+              what="expired job skipped by the worker")
+
+
+def test_fleet_close_unstarted_and_stats_shape():
+    srv = FleetServer(workers=2)
+    st = srv.stats_payload()
+    assert {"workers", "queue", "coalesce", "latency"} <= set(st["fleet"])
+    assert st["fleet"]["workers"] == 2
+    srv.close()                       # must not hang on idle workers
+    assert srv.queue.closed

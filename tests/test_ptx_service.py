@@ -4,6 +4,7 @@ bench-list parsing regression (whitespace / trailing commas / unknown
 names)."""
 
 import json
+import threading
 from http.client import HTTPConnection
 
 import pytest
@@ -13,6 +14,7 @@ from repro.core.frontend.kernelgen import get_bench
 from repro.core.frontend.stencil import lower_to_ptx
 from repro.core.ptx import print_kernel
 from repro.launch.ptx_service import (
+    BackpressureError,
     PtxServiceClient,
     PtxServiceServer,
     parse_bench_list,
@@ -166,6 +168,105 @@ def test_errors_counted_but_service_stays_up(client):
     st = client.stats()
     assert st["errors"] == before + 1
     assert client.healthz(), "an error response must not take the service down"
+
+
+# ---------------------------------------------------------------------------
+# body-size cap (the 413 satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_oversized_body_is_413_and_service_stays_up():
+    with PtxServiceServer(max_body_bytes=64) as srv:
+        srv.start()
+        body = json.dumps({"ptx": "x" * 200}).encode()
+        status, payload = _raw_post(srv, "/compile", body)
+        assert status == 413 and "64-byte limit" in payload["error"]
+        client = PtxServiceClient(srv.host, srv.port)
+        assert client.healthz(), "a 413 must not take the service down"
+        # small bodies still work through the same server
+        with pytest.raises(RuntimeError, match="400"):
+            client.compile(ptx="tiny")
+
+
+def test_declared_oversized_length_is_refused_before_reading(server):
+    # the header alone triggers the refusal: the 1-byte body is never
+    # buffered (that is the point of the cap)
+    status, payload = _raw_post(server, "/compile", b"x",
+                                content_length=server.max_body_bytes + 1)
+    assert status == 413 and "exceeds" in payload["error"]
+
+
+# ---------------------------------------------------------------------------
+# client retry policy (transport robustness satellite)
+# ---------------------------------------------------------------------------
+
+def _one_shot_server(scripts):
+    """A raw socket server playing ``scripts`` once each per
+    connection: ``None`` means slam the connection shut (a retryable
+    transport error); bytes are written verbatim as the response."""
+    import socket
+
+    sock = socket.socket()
+    sock.bind(("127.0.0.1", 0))
+    sock.listen(8)
+    port = sock.getsockname()[1]
+
+    def run():
+        for script in scripts:
+            conn, _ = sock.accept()
+            try:
+                conn.recv(65536)
+                if script is not None:
+                    conn.sendall(script)
+            finally:
+                conn.close()
+        sock.close()
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return port, t
+
+
+def _http_response(status_line, body=b"{}", extra_headers=()):
+    head = [status_line,
+            "Content-Type: application/json",
+            f"Content-Length: {len(body)}",
+            *extra_headers, "", ""]
+    return "\r\n".join(head).encode() + body
+
+
+def test_client_retries_transport_errors_with_counter():
+    ok = _http_response("HTTP/1.1 200 OK", body=b'{"ok": true}')
+    port, t = _one_shot_server([None, ok])   # first conn dies mid-air
+    client = PtxServiceClient("127.0.0.1", port, retries=2,
+                              backoff_s=0.001)
+    assert client.healthz() is True
+    t.join(timeout=10)
+    assert client.counters == {"requests": 1, "retries": 1,
+                               "backpressure": 0}
+
+
+def test_client_gives_up_after_retry_budget():
+    client = PtxServiceClient("127.0.0.1", 9, retries=2, backoff_s=0.001)
+    with pytest.raises(ConnectionRefusedError):
+        client.healthz()                     # nothing listens on port 9
+    assert client.counters["retries"] == 2
+
+
+def test_503_surfaces_backpressure_not_blind_retry():
+    resp = _http_response("HTTP/1.1 503 Service Unavailable",
+                          body=b'{"error": "queue full"}',
+                          extra_headers=("Retry-After: 7",))
+    port, t = _one_shot_server([resp])
+    client = PtxServiceClient("127.0.0.1", port, retries=3,
+                              backoff_s=0.001)
+    with pytest.raises(BackpressureError) as exc:
+        client.compile(bench="vecadd")
+    t.join(timeout=10)
+    assert exc.value.retry_after == 7.0
+    assert client.counters == {"requests": 1, "retries": 0,
+                               "backpressure": 1}, \
+        "an HTTP 503 response is the caller's pacing decision, not a " \
+        "transport retry"
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,7 @@ DRIVER_API = {
     "DetectionSummary",
     "Diagnostic",
     "NormalizedSource",
+    "PreparedSource",
     "Severity",
     "Source",
     "SourceFrontend",
