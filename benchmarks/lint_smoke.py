@@ -9,7 +9,12 @@ front doors on one process:
   in either the lowering or the analyzer;
 * **adversarial corpus** — each planted-bug kernel in
   ``tests/lint_corpus/`` must trip at least one finding of its planted
-  code (a clean buggy kernel means a detector went blind);
+  code (a clean buggy kernel means a detector went blind); the
+  prover-clean kernels (``shared_synced.ptx`` and the proven-mask
+  pair) are excluded — they plant *no* bug;
+* **prover** — the full corpus synthesized for sm_70 and re-linted:
+  every emitted full-mask ``shfl.sync`` must carry a
+  ``membermask-proven`` NOTE and nothing WARNING-or-worse may appear;
 * **service** — ``POST /lint`` must agree with the library on a clean
   bench and on a buggy kernel, and ``GET /stats`` must fold the
   per-finding counters into ``lint_counters``.
@@ -57,10 +62,14 @@ def run() -> bool:
     emit("lint.corpus.clean", int(ok), "bool",
          "zero WARNING-or-worse findings")
 
-    # 2. every adversarial kernel must trip its planted bug
+    # 2. every adversarial kernel must trip its planted bug (the clean
+    # twins — barrier-synced race and the two prover-proven masks —
+    # plant none and are checked separately)
     tripped = 0
+    clean_twins = {"shared_synced.ptx", "mask_reg_full.ptx",
+                   "mask_guarded_covering.ptx"}
     files = sorted(f for f in os.listdir(_CORPUS_DIR)
-                   if f.endswith(".ptx") and f != "shared_synced.ptx")
+                   if f.endswith(".ptx") and f not in clean_twins)
     for fname in files:
         with open(os.path.join(_CORPUS_DIR, fname), encoding="utf-8") as fh:
             findings = lint_source(fh.read())
@@ -73,6 +82,36 @@ def run() -> bool:
             ok = False
     emit("lint.adversarial.tripped", tripped, "count",
          f"of {len(files)} planted-bug kernels")
+
+    # 2b. the relational prover over the synthesized corpora: compile
+    # everything for sm_70, then every emitted full-mask shfl.sync must
+    # be PROVEN-OK (exactly one membermask-proven NOTE each, zero
+    # WARNING-or-worse findings)
+    from repro.core.analysis.lint import summarize
+    from repro.core.driver import Compiler
+    from repro.core.ptx import Module
+
+    t0 = perf_counter()
+    module = Module(kernels=[k for _, k in corpus_kernels("all")])
+    with Compiler(jobs=0, target="volta") as cc:
+        result = cc.compile(module, cache=None)
+    n_sync = result.ptx.count("shfl.sync")
+    s = summarize(lint_source(result.ptx))
+    emit("lint.prover.wall", perf_counter() - t0, "s",
+         f"synthesize {len(result.reports)} kernels for sm_70 + lint")
+    emit("lint.prover.n_shfl_sync", n_sync, "count")
+    emit("lint.prover.proven_masks", s["proven_masks"], "count",
+         "must equal n_shfl_sync: every membermask PROVEN-OK")
+    if s["errors"] or s["warnings"]:
+        emit("lint.prover.FAIL",
+             f"{s['errors']} error(s) / {s['warnings']} warning(s) on "
+             "the synthesized corpora")
+        ok = False
+    if not n_sync or s["proven_masks"] != n_sync:
+        emit("lint.prover.FAIL",
+             f"proved {s['proven_masks']} of {n_sync} synthesized "
+             "shfl.sync membermasks")
+        ok = False
 
     # 3. service e2e: POST /lint + /stats counters
     with open(os.path.join(_CORPUS_DIR, "div_shfl.ptx"),

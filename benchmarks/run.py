@@ -16,9 +16,9 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--only E1,E5]
 
 Snapshot mode (perf trajectory; see :mod:`benchmarks.snapshot`):
 
-  python -m benchmarks.run --snapshot                  # write BENCH_PR9.json
+  python -m benchmarks.run --snapshot                  # write BENCH_PR10.json
   python -m benchmarks.run --snapshot /tmp/now.json \
-                           --check BENCH_PR9.json      # CI perf smoke
+                           --check BENCH_PR10.json      # CI perf smoke
 
 Saturation smoke (the equality-saturation middle-end, PR 7):
 

@@ -20,6 +20,11 @@ eyeballing CSV logs:
   cost < 10% of the cold compile), and the finding count — pinned at
   zero: the golden corpus is clean, so any finding is a regression in
   either the corpus or the analyzer.
+* **e1_prover** — the relational membermask prover over the
+  *synthesized* suite (compile for sm_70, then lint the output): every
+  emitted full-mask ``shfl.sync`` must be PROVEN-OK (exact
+  ``proven_masks == n_shfl_sync``, zero ERRORs/WARNINGs), with the
+  lint+prover wall sharing the analyzer's <10%-of-cold-E1 budget.
 * **e9_serving** — HTTP service throughput (cold / warm / replica
   phases) from :mod:`benchmarks.serving_throughput`.
 * **e10_fleet** — the fleet serving subsystem under load (coalesce /
@@ -50,7 +55,7 @@ from typing import List, Optional
 
 SCHEMA = "repro-bench-snapshot"
 SCHEMA_VERSION = 1
-DEFAULT_PATH = "BENCH_PR9.json"
+DEFAULT_PATH = "BENCH_PR10.json"
 
 _SPIN_ITERS = 2_000_000
 
@@ -201,6 +206,42 @@ def measure_e1_lint(repeat: int = 3) -> dict:
     }
 
 
+def measure_e1_prover(repeat: int = 3) -> dict:
+    """Synthesize the suite for sm_70, then re-compile the *synthesized*
+    PTX with ``lint="warn"``: the relational membermask prover must
+    prove every emitted full-mask ``shfl.sync`` (zero ERRORs/WARNINGs,
+    one ``membermask-proven`` NOTE per sync shuffle).  ``prover_s`` is
+    the ``verify-ptx`` pass's own time on that run — the same
+    accounting as ``e1_lint.lint_s`` (parse and the shared
+    cfg/uniformity analyses are attributed to their own stages), so it
+    shares the analyzer's <10%-of-cold-E1 budget like for like.
+    """
+    from repro.core.analysis.lint import summarize
+    from repro.core.driver import Compiler
+
+    module = _kernelgen_module()
+    with Compiler(jobs=0, target="volta") as cc:
+        synth = cc.compile(module, cache=None)
+    ptx = synth.ptx
+    best_lint = float("inf")
+    result = None
+    for _ in range(repeat):
+        with Compiler(jobs=0, target="volta", lint="warn") as cc:
+            result = cc.compile(ptx, cache=None)
+        best_lint = min(best_lint,
+                        result.pass_times.get("verify-ptx", 0.0))
+    s = summarize(result.findings)
+    return {
+        "prover_s": best_lint,
+        "n_kernels": len(result.reports),
+        "n_shuffles": synth.n_shuffles,
+        "n_shfl_sync": ptx.count("shfl.sync"),
+        "proven_masks": s["proven_masks"],
+        "errors": s["errors"],
+        "warnings": s["warnings"],
+    }
+
+
 def measure_e9() -> dict:
     from . import serving_throughput
     m = serving_throughput.measure()
@@ -243,6 +284,7 @@ def take(serving: bool = True, repeat: int = 3) -> dict:
         "e1_warm": measure_e1_warm(),
         "e1_saturate": measure_e1_saturate(),
         "e1_lint": measure_e1_lint(),
+        "e1_prover": measure_e1_prover(),
     }
     if serving:
         snap["e9_serving"] = measure_e9()
@@ -327,6 +369,37 @@ def check(current: dict, baseline: dict,
             fails.append(
                 f"e1_lint.lint_s: verify-ptx took {lint_s:.3f}s, over "
                 f"10% of the cold E1 wall ({wall_budget:.3f}s budget)")
+    cur_pr, base_pr = current.get("e1_prover"), baseline.get("e1_prover")
+    if cur_pr and base_pr:
+        for key in ("n_kernels", "n_shuffles", "n_shfl_sync",
+                    "proven_masks", "errors", "warnings"):
+            if cur_pr.get(key) != base_pr.get(key):
+                fails.append(f"e1_prover.{key}: {cur_pr.get(key)} != "
+                             f"baseline {base_pr.get(key)} (proof counts "
+                             "are deterministic — this is a semantic "
+                             "change)")
+    if cur_pr:
+        # absolute invariants, independent of the baseline: every
+        # synthesized full-mask shfl.sync carries a proof and nothing
+        # WARNING-or-worse survives
+        if cur_pr.get("errors") or cur_pr.get("warnings"):
+            fails.append(
+                f"e1_prover: {cur_pr.get('errors')} error(s) / "
+                f"{cur_pr.get('warnings')} warning(s) on the synthesized "
+                "suite (must be 0/0)")
+        if cur_pr.get("proven_masks") != cur_pr.get("n_shfl_sync") \
+                or not cur_pr.get("proven_masks"):
+            fails.append(
+                f"e1_prover: proved {cur_pr.get('proven_masks')} of "
+                f"{cur_pr.get('n_shfl_sync')} synthesized shfl.sync "
+                "membermasks (every one must be PROVEN-OK)")
+        prover_s = cur_pr.get("prover_s", 0.0)
+        wall_budget = 0.10 * cur_e1.get("wall_s", 0.0)
+        if wall_budget > 0 and prover_s > wall_budget:
+            fails.append(
+                f"e1_prover.prover_s: lint+prover took {prover_s:.3f}s, "
+                f"over 10% of the cold E1 wall ({wall_budget:.3f}s "
+                "budget)")
     cur_warm, base_warm = current.get("e1_warm"), baseline.get("e1_warm")
     if cur_warm and base_warm:
         for key in ("cache_hits", "cache_misses"):
@@ -400,6 +473,14 @@ def run_snapshot(path: str, check_path: Optional[str] = None,
          "verify-ptx pass time (budget: <10% of cold E1 wall)")
     emit("snapshot.e1_lint.n_findings", lint["n_findings"], "count",
          "must stay 0: the lowered suite is clean")
+    prover = snap["e1_prover"]
+    emit("snapshot.e1_prover.prover_s", prover["prover_s"], "s",
+         "lint of the synthesized suite (shares the <10% budget)")
+    emit("snapshot.e1_prover.proven_masks", prover["proven_masks"],
+         "count", f"of {prover['n_shfl_sync']} synthesized shfl.sync — "
+         "every membermask must be PROVEN-OK")
+    emit("snapshot.e1_prover.errors", prover["errors"], "count",
+         "must stay 0")
     if "e9_serving" in snap:
         e9 = snap["e9_serving"]
         emit("snapshot.e9.cold_req_per_s", e9["cold_req_per_s"], "req/s")

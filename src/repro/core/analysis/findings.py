@@ -30,6 +30,7 @@ CODES = (
     "divergent-shfl",         # ERROR: shfl in a join-divergent region
     "membermask-noncovering",  # ERROR: constant mask misses active lanes
     "membermask-unprovable",  # WARNING: register mask, coverage unknown
+    "membermask-proven",      # NOTE: mask proven to cover the active set
     "shfl-exit-guard",        # NOTE: full mask but under an exit guard
     "shared-race",            # WARNING: cross-thread .shared st->ld, no bar
     "undef-use",              # ERROR: register never defined on any path
@@ -48,10 +49,17 @@ class Finding:
     message: str
     kernel: Optional[str] = None
     uid: Optional[int] = None
+    # distinguishes same-code findings anchored at the same statement
+    # (two shfls in one bundle, one load raced by two stores): folded
+    # into ``location`` so diagnostic dedup keeps both
+    detail: Optional[str] = None
 
     @property
     def location(self) -> Optional[str]:
-        return None if self.uid is None else f"uid:{self.uid}"
+        if self.uid is None:
+            return None
+        base = f"uid:{self.uid}"
+        return base if self.detail is None else f"{base}:{self.detail}"
 
     def __str__(self) -> str:
         where = f"{self.kernel or '<kernel>'}"
@@ -63,13 +71,13 @@ class Finding:
     def to_dict(self) -> Dict:
         return {"code": self.code, "severity": self.severity.name,
                 "message": self.message, "kernel": self.kernel,
-                "uid": self.uid}
+                "uid": self.uid, "detail": self.detail}
 
     @classmethod
     def from_dict(cls, d: Dict) -> "Finding":
         return cls(code=d["code"], severity=Severity[d["severity"]],
                    message=d["message"], kernel=d.get("kernel"),
-                   uid=d.get("uid"))
+                   uid=d.get("uid"), detail=d.get("detail"))
 
 
 def finding_counters(findings: Iterable[Finding]) -> Dict[str, int]:

@@ -107,5 +107,5 @@ def lint_races(ctx: KernelContext) -> List[Finding]:
                     "shared-race", Severity.WARNING,
                     f"cross-thread .shared load may race the store at "
                     f"uid:{st.stmt_uid} (no dominating bar.sync between "
-                    "them)", uid=ld.stmt_uid))
+                    "them)", uid=ld.stmt_uid, detail=f"st:{st.stmt_uid}"))
     return out

@@ -340,22 +340,52 @@ def join_block_ids(ctx: KernelContext) -> FrozenSet[int]:
     return frozenset(b for b, lv in enumerate(info.block_level) if lv == JOIN)
 
 
-def gate_pairs(ctx: KernelContext, detection) -> Tuple[object, int]:
+def frozen_block_ids(ctx: KernelContext) -> Tuple[FrozenSet[int], int]:
+    """Block ids e-graph extraction must freeze, honoring ``config.widen``.
+
+    Returns ``(frozen, n_unfrozen)``: the raw JOIN set when widening is
+    off; the survivor-refined JOIN set plus how many raw-JOIN blocks the
+    relational proofs released when it is on.
+    """
+    raw = join_block_ids(ctx)
+    if not getattr(ctx.config, "widen", False) or not raw:
+        return raw, 0
+    from .relational import refined_join_block_ids
+    refined = refined_join_block_ids(ctx)
+    return refined, len(raw - refined)
+
+
+def gate_pairs(ctx: KernelContext, detection) -> Tuple[object, int, int]:
     """Drop shuffle pairs whose load sits in a JOIN-divergent region.
 
-    Returns ``(gated_detection, n_dropped)`` — the original object when
-    nothing is dropped (the common, fully-uniform case), a *new*
-    ``DetectionResult`` otherwise (the input may be shared across
-    target variants and must not be mutated).
+    Returns ``(gated_detection, n_dropped, n_widened)`` — the original
+    object when nothing is dropped (the common, fully-uniform case), a
+    *new* ``DetectionResult`` otherwise (the input may be shared across
+    target variants and must not be mutated).  With ``config.widen`` on,
+    divergence levels come from the survivor-refined classification and
+    ``n_widened`` counts pairs the raw JOIN gate would have dropped but
+    the relational proofs kept (callers re-validate those through the
+    differential concrete-emulation gate before trusting them).
     """
     pairs = getattr(detection, "pairs", None)
     if not pairs:
-        return detection, 0
+        return detection, 0, 0
+    level = level_of_uid
+    widened = 0
+    if getattr(ctx.config, "widen", False):
+        from .relational import refined_level_of_uid
+        level = refined_level_of_uid
+        widened = sum(
+            1 for p in pairs
+            if (level_of_uid(ctx, p.dst_uid) == JOIN
+                or level_of_uid(ctx, p.src_uid) == JOIN)
+            and level(ctx, p.dst_uid) != JOIN
+            and level(ctx, p.src_uid) != JOIN)
     keep = [p for p in pairs
-            if level_of_uid(ctx, p.dst_uid) != JOIN
-            and level_of_uid(ctx, p.src_uid) != JOIN]
+            if level(ctx, p.dst_uid) != JOIN
+            and level(ctx, p.src_uid) != JOIN]
     dropped = len(pairs) - len(keep)
     if not dropped:
-        return detection, 0
+        return detection, 0, widened
     import dataclasses
-    return dataclasses.replace(detection, pairs=keep), dropped
+    return dataclasses.replace(detection, pairs=keep), dropped, widened

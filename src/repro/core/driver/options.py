@@ -56,6 +56,16 @@ class CompilerOptions:
       ``KernelReport`` and the JSON wire form; the uniformity *gate*
       inside ``select-shuffles``/``extract`` is always on regardless
       of this knob — it is a soundness property, not a diagnostic
+    * ``widen`` — opt-in proof-widened synthesis: gate decisions use
+      the relational abstract interpreter's survivor-refined divergence
+      levels instead of the raw uniformity lattice (a vacuous or
+      lane-invariant guard no longer drops pairs or freezes blocks),
+      and proven contiguous survivor prefixes tighten the synthesized
+      corner-case clamps.  Every widened decision is re-validated by
+      the differential concrete-emulation gate; a failed gate falls
+      back to the unwidened synthesis and counts
+      ``lint_widening_reverted``.  Off (default) keeps codegen
+      byte-identical to PR 8 behavior
 
     Session knobs (execution policy, never part of the cache key):
 
@@ -89,6 +99,7 @@ class CompilerOptions:
     prune_flows: bool = True
     saturate: bool = False
     lint: str = "off"
+    widen: bool = False
 
     jobs: Optional[int] = None
     cache_entries: int = 4096

@@ -335,9 +335,16 @@ def run_extract(ctx) -> None:
         counters.setdefault(key, 0)
     if not blocks:
         return
-    from ..analysis.uniformity import join_block_ids
-    frozen = join_block_ids(ctx)
+    from ..analysis.uniformity import frozen_block_ids
+    frozen, unfrozen = frozen_block_ids(ctx)
     counters["sat_divergent_blocks_frozen"] += len(frozen)
+    if unfrozen:
+        # survivor proofs released raw-JOIN blocks for extraction
+        # (config.widen only); the differential gate below still
+        # validates whatever the extractor does with them
+        lint = ctx.products.setdefault("lint_counters", {})
+        lint["lint_widened_blocks"] = \
+            lint.get("lint_widened_blocks", 0) + unfrozen
     profile = resolve_target(ctx.config.target)
     result = extract_kernel(ctx.kernel, blocks, profile, frozen=frozen)
     if result.rewrites == 0 and result.deleted == 0:

@@ -39,6 +39,7 @@ class PipelineConfig:
     prune_flows: bool = True    # emulator: relevance-gated flow pruning
     saturate: bool = False      # equality-saturation middle-end (egraph)
     lint: str = "off"           # verify-ptx static analysis: off | warn | strict
+    widen: bool = False         # survivor-proof-widened synthesis gating
 
     def cache_token(self) -> Tuple:
         # the target participates as its *resolved* profile name so
@@ -47,7 +48,7 @@ class PipelineConfig:
         return (self.mode, self.max_delta, self.lane,
                 resolve_target(self.target).name, self.selection,
                 self.max_flows, self.max_steps, self.prune_flows,
-                self.saturate, self.lint)
+                self.saturate, self.lint, self.widen)
 
 
 # ---------------------------------------------------------------------------

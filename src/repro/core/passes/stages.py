@@ -113,15 +113,21 @@ def _gate_detection(ctx: KernelContext, detection):
     """The always-on uniformity safety gate: refuse to synthesize a
     shuffle whose load sits in a join-divergent region (the source lane
     may be executing the other side of the branch — the exact hazard
-    class the static analyzer flags as ``divergent-shfl``)."""
+    class the static analyzer flags as ``divergent-shfl``).
+
+    Returns ``(gated_detection, n_widened)``; with ``config.widen`` on,
+    ``n_widened`` counts pairs kept only because the relational
+    survivor proofs declassified their region (the synthesize stage
+    re-validates those through the differential gate).
+    """
     from ..analysis.uniformity import gate_pairs
-    gated, dropped = gate_pairs(ctx, detection)
+    gated, dropped, widened = gate_pairs(ctx, detection)
     if dropped:
         counters = ctx.products.setdefault("lint_counters", {})
         counters["lint_gated_pairs"] = \
             counters.get("lint_gated_pairs", 0) + dropped
         ctx.products["detection"] = gated
-    return gated
+    return gated, widened
 
 
 @register_pass("select-shuffles")
@@ -134,7 +140,7 @@ class SelectShuffles:
         # late import: keeps the targets package import-light and avoids
         # synthesis <-> passes import cycles
         from ..targets.cost import select
-        detection = _gate_detection(ctx, _detection(ctx))
+        detection, _ = _gate_detection(ctx, _detection(ctx))
         if ctx.config.selection != "cost":
             return
         report = select(detection, ctx.config.target, mode=ctx.config.mode)
@@ -153,8 +159,41 @@ class SynthesizeShuffles:
         from ..synthesis.codegen import synthesize
         # idempotent re-gate: covers custom pass lists that synthesize
         # without the select stage
-        detection = _gate_detection(ctx, _detection(ctx))
+        detection, widened = _gate_detection(ctx, _detection(ctx))
+        clamps = None
+        if ctx.config.widen and getattr(detection, "pairs", None):
+            from ..analysis.relational import survivor_clamps
+            clamps = survivor_clamps(ctx, detection) or None
         new_kernel = synthesize(ctx.kernel, detection,
                                 mode=ctx.config.mode,
-                                target=ctx.config.target)
+                                target=ctx.config.target,
+                                clamps=clamps)
+        if widened or clamps:
+            # every proof-widened decision (pair kept past the raw JOIN
+            # gate, or clamp tightened past the blanket corner case) is
+            # re-validated by differential concrete emulation; a failed
+            # check reverts to the unwidened synthesis
+            from ..egraph.verify import differential_check
+            counters = ctx.products.setdefault("lint_counters", {})
+            reason = differential_check(ctx.kernel, new_kernel)
+            if reason is not None:
+                counters["lint_widening_reverted"] = \
+                    counters.get("lint_widening_reverted", 0) + 1
+                import dataclasses
+                from ..analysis.uniformity import JOIN, level_of_uid
+                keep = [p for p in detection.pairs
+                        if level_of_uid(ctx, p.dst_uid) != JOIN
+                        and level_of_uid(ctx, p.src_uid) != JOIN]
+                safe = dataclasses.replace(detection, pairs=keep)
+                ctx.products["detection"] = safe
+                new_kernel = synthesize(ctx.kernel, safe,
+                                        mode=ctx.config.mode,
+                                        target=ctx.config.target)
+            else:
+                if widened:
+                    counters["lint_widened_pairs"] = \
+                        counters.get("lint_widened_pairs", 0) + widened
+                if clamps:
+                    counters["lint_survivor_clamps"] = \
+                        counters.get("lint_survivor_clamps", 0) + len(clamps)
         ctx.replace_kernel(new_kernel)

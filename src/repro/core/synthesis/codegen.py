@@ -40,7 +40,19 @@ MODES = ("ptxasw", "nocorner", "noload")
 
 def synthesize(kernel: Kernel, detection: DetectionResult,
                mode: str = "ptxasw",
-               target: Union[TargetProfile, str, None] = None) -> Kernel:
+               target: Union[TargetProfile, str, None] = None,
+               clamps: Optional[Dict[int, int]] = None) -> Kernel:
+    """Rewrite covered loads into shuffle sequences.
+
+    ``clamps`` (optional, ``{dst_uid: C}``) carries survivor-prefix
+    proofs from the relational analyzer: for a covered load whose block
+    provably only ever runs lanes ``{0..C-1}``, the incomplete-warp
+    check compares the activemask against ``(1<<C)-1`` instead of the
+    full mask (so guarded-but-complete warps keep the shuffle fast
+    path) and a down-shuffle's out-of-range threshold tightens from
+    ``W-1-N`` to ``C-1-N``.  Without ``clamps`` (the default) the
+    output is byte-identical to the blanket corner-case handling.
+    """
     assert mode in MODES
     profile = resolve_target(target)
     width = profile.warp_width
@@ -100,6 +112,15 @@ def synthesize(kernel: Kernel, detection: DetectionResult,
                 new_body.append(Instr(f"mov.{t}", [dst, Reg(cap)]))
                 continue
             n = pair.delta
+            # survivor-prefix clamp: only meaningful at the native
+            # 32-lane warp, and a down-shuffle whose every surviving
+            # source lane has exited (C <= N) must keep the blanket
+            # guard (the tightened threshold would stop firing)
+            c = (clamps or {}).get(instr.uid)
+            if c is not None and (width != 32 or (n > 0 and c - 1 - n < 0)):
+                c = None
+            pair_mask = membermask if c is None else Imm((1 << c) - 1,
+                                                         hex=True)
             if mode == "ptxasw":
                 # the checker needs the active mask to detect incomplete
                 # warps (final-warp corner case, paper Listing 6)
@@ -108,18 +129,19 @@ def synthesize(kernel: Kernel, detection: DetectionResult,
                 oor = out.new_reg("pred", hint="sfloor")
                 pred = out.new_reg("pred", hint="sflp")
                 new_body.append(Instr("activemask.b32", [Reg(mask)]))
-                # "incomplete warp" = active set != the profile's full
-                # warp (bitwise identical to the historical -1 compare
-                # at warp width 32)
+                # "incomplete warp" = active set != the expected full
+                # set: the profile's whole warp (bitwise identical to
+                # the historical -1 compare at warp width 32), or the
+                # proven survivor prefix when a clamp applies
                 new_body.append(Instr("setp.ne.s32",
-                                      [Reg(inc), Reg(mask), membermask]))
+                                      [Reg(inc), Reg(mask), pair_mask]))
                 if n < 0:
                     new_body.append(Instr("setp.lt.u32",
                                           [Reg(oor), Reg(wid), Imm(-n)]))
                 else:
+                    bound = width - 1 - n if c is None else c - 1 - n
                     new_body.append(Instr("setp.gt.u32",
-                                          [Reg(oor), Reg(wid),
-                                           Imm(width - 1 - n)]))
+                                          [Reg(oor), Reg(wid), Imm(bound)]))
                 new_body.append(Instr("or.pred",
                                       [Reg(pred), Reg(inc), Reg(oor)]))
             if n < 0:
@@ -129,8 +151,11 @@ def synthesize(kernel: Kernel, detection: DetectionResult,
                 shfl_ops = [dst, Reg(cap), Imm(n), Imm(width - 1)]
                 shfl_dir = "down"
             if profile.has_shfl_sync:
+                # a clamped pair names exactly the proven survivor set
+                # in its membermask — which the static prover can then
+                # re-verify against the same survivor analysis
                 new_body.append(Instr(f"shfl.sync.{shfl_dir}.b32",
-                                      shfl_ops + [membermask]))
+                                      shfl_ops + [pair_mask]))
             else:
                 new_body.append(Instr(f"shfl.{shfl_dir}.b32", shfl_ops))
             if mode == "ptxasw":

@@ -2,8 +2,10 @@
 
 Three subcommands::
 
-  # the shared network cache tier (one per fleet)
-  python -m repro.launch.fleet cache-server --port 8790
+  # the shared network cache tier (one per fleet; --cache-dir makes
+  # the store restart-warm by spilling entries to disk)
+  python -m repro.launch.fleet cache-server --port 8790 \
+      --cache-dir /tmp/fleet-cache
 
   # a replica front-end (as many as you like)
   python -m repro.launch.fleet serve --port 8080 \
@@ -80,11 +82,13 @@ def _cache_server_cmd(args) -> None:
 
     server = CacheTierServer(host=args.host, port=args.port,
                              max_bytes=args.max_bytes,
+                             cache_dir=args.cache_dir,
                              verbose=args.verbose)
     _run_until_interrupted(
         server, args.port_file,
         f"fleet cache tier listening on {server.url} "
-        f"(budget {args.max_bytes} bytes)")
+        f"(budget {args.max_bytes} bytes, "
+        f"disk={args.cache_dir or 'off'})")
 
 
 def _smoke_cmd(args) -> None:
@@ -143,6 +147,9 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                        help="TCP port (0 = ephemeral; see --port-file)")
     cache.add_argument("--max-bytes", type=int, default=None,
                        help="LRU byte budget of the in-memory store")
+    cache.add_argument("--cache-dir", default=None,
+                       help="spill entries to this directory (atomic "
+                            "write-through; restart-warm)")
     cache.add_argument("--port-file", default=None,
                        help="write {host, port, pid} JSON here once bound")
     cache.add_argument("--verbose", action="store_true")

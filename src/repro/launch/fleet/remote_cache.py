@@ -37,6 +37,7 @@ from __future__ import annotations
 import base64
 import dataclasses
 import json
+import os
 import pickle
 import threading
 import time
@@ -302,15 +303,29 @@ class CacheTierServer:
     (``max_bytes``); a GET refreshes recency, so hot kernels survive a
     scan of cold ones — the same policy as the memory/disk tiers.
 
+    With ``cache_dir`` the store also spills to disk: every PUT is
+    written through to ``<cache_dir>/<digest>.entry`` (atomic
+    tmp+rename, so a crashed writer never leaves a torn blob), and a
+    memory miss reads through the directory and promotes the blob back
+    into the LRU.  Memory stays the bounded hot set; the directory is
+    the durable superset, so a restarted server answers from a warm
+    floor instead of forcing the whole fleet to recompile.  Disk I/O
+    failures are counted (``disk_errors``) and degrade to the
+    in-memory-only behaviour, never an HTTP error.
+
     ``port=0`` binds an ephemeral port; ``start()`` serves on a daemon
     thread; ``serve_forever()`` blocks (the CLI).
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
                  max_bytes: int = DEFAULT_MAX_BYTES,
+                 cache_dir: Optional[str] = None,
                  verbose: bool = False) -> None:
         self.max_bytes = max_bytes
+        self.cache_dir = cache_dir
         self.verbose = verbose
+        if cache_dir is not None:
+            os.makedirs(cache_dir, exist_ok=True)
         self._entries: "OrderedDict[str, bytes]" = OrderedDict()
         self._bytes = 0
         self._lock = threading.Lock()
@@ -318,6 +333,9 @@ class CacheTierServer:
         self._hits = 0
         self._puts = 0
         self._evictions = 0
+        self._disk_hits = 0
+        self._disk_puts = 0
+        self._disk_errors = 0
         self._started = time.time()
         self._httpd = ThreadingHTTPServer((host, port), _CacheHandler)
         self._httpd.daemon_threads = True
@@ -326,28 +344,62 @@ class CacheTierServer:
         self._serving = False
 
     # -- store ----------------------------------------------------------
+    def _disk_path(self, digest: str) -> str:
+        return os.path.join(self.cache_dir, f"{digest}.entry")
+
+    def _insert_locked(self, digest: str, blob: bytes) -> None:
+        old = self._entries.pop(digest, None)
+        if old is not None:
+            self._bytes -= len(old)
+        self._entries[digest] = blob
+        self._bytes += len(blob)
+        while self._bytes > self.max_bytes and len(self._entries) > 1:
+            _, evicted = self._entries.popitem(last=False)
+            self._bytes -= len(evicted)
+            self._evictions += 1
+
     def get(self, digest: str) -> Optional[bytes]:
         with self._lock:
             self._gets += 1
             blob = self._entries.get(digest)
-            if blob is None:
+            if blob is not None:
+                self._hits += 1
+                self._entries.move_to_end(digest)    # a hit is a touch
+                return blob
+            if self.cache_dir is None:
+                return None
+            try:
+                with open(self._disk_path(digest), "rb") as f:
+                    blob = f.read()
+            except FileNotFoundError:
+                return None
+            except OSError:
+                self._disk_errors += 1
                 return None
             self._hits += 1
-            self._entries.move_to_end(digest)    # a hit is a touch
+            self._disk_hits += 1
+            self._insert_locked(digest, blob)        # promote to hot set
             return blob
 
     def put(self, digest: str, blob: bytes) -> None:
         with self._lock:
             self._puts += 1
-            old = self._entries.pop(digest, None)
-            if old is not None:
-                self._bytes -= len(old)
-            self._entries[digest] = blob
-            self._bytes += len(blob)
-            while self._bytes > self.max_bytes and len(self._entries) > 1:
-                _, evicted = self._entries.popitem(last=False)
-                self._bytes -= len(evicted)
-                self._evictions += 1
+            self._insert_locked(digest, blob)
+            if self.cache_dir is None:
+                return
+            path = self._disk_path(digest)
+            tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+            try:
+                with open(tmp, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, path)
+                self._disk_puts += 1
+            except OSError:
+                self._disk_errors += 1
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
 
     def __len__(self) -> int:
         with self._lock:
@@ -355,7 +407,7 @@ class CacheTierServer:
 
     def stats_payload(self) -> Dict:
         with self._lock:
-            return {
+            payload = {
                 "ok": True,
                 "uptime_s": round(time.time() - self._started, 3),
                 "entries": len(self._entries),
@@ -366,6 +418,18 @@ class CacheTierServer:
                 "puts": self._puts,
                 "evictions": self._evictions,
             }
+            if self.cache_dir is not None:
+                try:
+                    n_disk = sum(1 for f in os.listdir(self.cache_dir)
+                                 if f.endswith(".entry"))
+                except OSError:
+                    n_disk = -1
+                payload.update(cache_dir=self.cache_dir,
+                               disk_entries=n_disk,
+                               disk_hits=self._disk_hits,
+                               disk_puts=self._disk_puts,
+                               disk_errors=self._disk_errors)
+            return payload
 
     # -- lifecycle (mirrors PtxServiceServer) ---------------------------
     @property

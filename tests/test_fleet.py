@@ -213,6 +213,40 @@ def test_cache_tier_server_lru_by_bytes():
     assert st["gets"] == 2 and st["hits"] == 1
 
 
+def test_cache_tier_disk_spill_survives_restart(tmp_path):
+    spill = str(tmp_path / "tier")
+    kernel = _vecadd_kernel()
+    with CacheTierServer(cache_dir=spill) as tier:
+        tier.start()
+        rc = RemoteCache(tier.url)
+        rc.store("warm", kernel, FakeReport("vecadd"))
+        st = tier.stats_payload()
+        assert st["disk_puts"] == 1 and st["disk_entries"] == 1
+        assert st["disk_errors"] == 0
+    # a fresh process over the same directory answers from disk
+    with CacheTierServer(cache_dir=spill) as tier:
+        tier.start()
+        rc = RemoteCache(tier.url)
+        loaded = rc.load("warm")
+        assert loaded is not None
+        assert print_kernel(loaded[0]) == print_kernel(kernel)
+        st = tier.stats_payload()
+        assert st["disk_hits"] == 1 and st["cache_dir"] == spill
+        assert st["entries"] == 1                 # promoted to hot set
+        assert rc.load("warm") is not None        # second hit: memory
+        assert tier.stats_payload()["disk_hits"] == 1
+
+
+def test_cache_tier_eviction_keeps_disk_superset(tmp_path):
+    spill = str(tmp_path / "tier")
+    srv = CacheTierServer(max_bytes=100, cache_dir=spill)
+    srv.put("a" * 64, b"x" * 60)
+    srv.put("b" * 64, b"y" * 60)                  # evicts a from memory
+    assert srv.stats_payload()["evictions"] == 1
+    assert srv.get("a" * 64) == b"x" * 60         # ...but disk still has it
+    assert srv.stats_payload()["disk_hits"] == 1
+
+
 def test_remote_cache_http_roundtrip_and_counters():
     kernel = _vecadd_kernel()
     with CacheTierServer() as tier:

@@ -40,6 +40,11 @@ CORPUS_EXPECTATIONS = {
     "shared_synced.ptx": set(),
     "undef_use.ptx": {("undef-use", "ERROR", 2)},
     "width_mismatch.ptx": {("width-mismatch", "WARNING", 2)},
+    # the relational membermask prover (PR 10)
+    "mask_reg_full.ptx": {("membermask-proven", "NOTE", 6)},
+    "mask_wrong.ptx": {("membermask-noncovering", "ERROR", 5)},
+    "mask_guarded_covering.ptx": {("membermask-proven", "NOTE", 7)},
+    "mask_loop_carried.ptx": {("membermask-unprovable", "WARNING", 8)},
 }
 
 
@@ -59,7 +64,8 @@ def test_corpus_kernel_findings(fname):
 def test_race_finding_names_the_store():
     [f] = _lint(_corpus("shared_race.ptx"))
     assert "uid:3" in f.message      # the racing store's anchor
-    assert f.location == "uid:6"     # reported at the load
+    assert f.detail == "st:3"        # ...and in the dedup key
+    assert f.location == "uid:6:st:3"   # reported at the load
 
 
 def test_finding_str_and_dict_roundtrip():
@@ -254,8 +260,9 @@ def test_gate_pairs_does_not_mutate_shared_detection():
     assert detection.pairs
     before = list(detection.pairs)
     ctx = KernelContext(kernel, PipelineConfig())
-    gated, dropped = gate_pairs(ctx, detection)
+    gated, dropped, widened = gate_pairs(ctx, detection)
     assert dropped == len(before)
+    assert widened == 0              # widening is off by default
     assert gated is not detection
     assert detection.pairs == before     # input untouched
 
@@ -373,7 +380,7 @@ def test_wire_form_roundtrips_findings():
     assert [f.to_dict() for f in back.findings] \
         == [f.to_dict() for f in result.findings]
     [d] = [d for d in back.diagnostics if d.source == "verify-ptx"]
-    assert d.code == "shared-race" and d.location == "uid:6"
+    assert d.code == "shared-race" and d.location == "uid:6:st:3"
     assert back.lint_counters == result.lint_counters
 
 
@@ -404,18 +411,54 @@ def test_cli_strict_fails_on_corpus_files(capsys):
     files = sorted(glob.glob(os.path.join(CORPUS_DIR, "*.ptx")))
     assert main(["--strict", *files]) == 1
     out = capsys.readouterr().out
-    assert "3 error(s), 2 warning(s)" in out
-    # default threshold (ERROR) also trips — three errors are planted
+    assert "4 error(s), 3 warning(s), 2 note(s)" in out
+    # --strict is an alias of the default WARNING threshold
     assert main(files) == 1
+    # the historical ERROR-only gate also trips — four errors planted
+    assert main(["--errors-only", *files]) == 1
 
 
-def test_cli_json_output(capsys):
+def test_cli_exit_code_contract(capsys):
+    """0 clean / 1 findings >= WARNING / 2 usage error."""
     from repro.core.analysis.lint import main
+    proven = os.path.join(CORPUS_DIR, "mask_reg_full.ptx")
+    warn = os.path.join(CORPUS_DIR, "mask_loop_carried.ptx")
+    assert main([proven]) == 0           # NOTEs never fail a build
+    assert main([warn]) == 1             # WARNING trips the default
+    assert main(["--errors-only", warn]) == 0
+    assert main([os.path.join(CORPUS_DIR, "no_such_file.ptx")]) == 2
+    capsys.readouterr()
+
+
+def test_cli_json_envelope(capsys):
+    from repro.core.analysis.lint import (
+        JSON_SCHEMA, JSON_SCHEMA_VERSION, main)
     path = os.path.join(CORPUS_DIR, "undef_use.ptx")
     assert main(["--json", path]) == 1
     payload = json.loads(capsys.readouterr().out)
-    assert payload[0]["code"] == "undef-use"
-    assert payload[0]["severity"] == "ERROR"
+    assert payload["schema"] == JSON_SCHEMA
+    assert payload["schema_version"] == JSON_SCHEMA_VERSION
+    assert payload["n_kernels"] == 1
+    [f] = payload["findings"]
+    assert f["code"] == "undef-use"
+    assert f["severity"] == "ERROR"
+    assert payload["summary"] == {"errors": 1, "warnings": 0,
+                                  "notes": 0, "proven_masks": 0}
+
+
+def test_cli_synthesized_proves_every_membermask(capsys):
+    """--synthesized compiles first, then lints the emitted shuffles:
+    every synthesized full-mask shfl.sync must be PROVEN-OK."""
+    from repro.core.analysis.lint import main
+    assert main(["--bench", "jacobi", "--synthesized",
+                 "--target", "volta", "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    s = payload["summary"]
+    assert s["errors"] == 0 and s["warnings"] == 0
+    assert s["proven_masks"] > 0
+    assert s["proven_masks"] == s["notes"]
+    assert all(f["code"] == "membermask-proven"
+               for f in payload["findings"])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,374 @@
+"""Relational abstract interpreter (PR 10): unit + integration tests.
+
+Covers the per-lane constraint solver (``lanes_may``), the relational
+fixpoint (constant propagation, loop-carried widening soundness), the
+survivor-set analysis (exit-guard prefixes, vacuous-guard
+declassification), the membermask prover, and proof-widened synthesis:
+pairs kept past the raw JOIN gate, survivor-prefix clamps, the
+differential re-validation, and byte-identity when widening is off.
+"""
+
+import json
+import os
+
+import pytest
+
+CORPUS_DIR = os.path.join(os.path.dirname(__file__), "lint_corpus")
+
+
+def _corpus(name: str) -> str:
+    with open(os.path.join(CORPUS_DIR, name), "r", encoding="utf-8") as fh:
+        return fh.read()
+
+
+def _ctx(text: str, **config):
+    from repro.core.passes.context import KernelContext, PipelineConfig
+    from repro.core.ptx.parser import parse
+    import repro.core.passes.analyses  # noqa: F401  (registers cfg etc.)
+    import repro.core.analysis.uniformity  # noqa: F401
+    import repro.core.analysis.relational  # noqa: F401
+    return KernelContext(parse(text).kernels[0], PipelineConfig(**config))
+
+
+FULL = 0xFFFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# the per-lane constraint solver
+# ---------------------------------------------------------------------------
+
+def test_lanes_may_unsigned_guard_asymmetry():
+    """lane = 32q + lambda with q unknown: ``tid.x < 16`` pins the
+    surviving lanes to the 0xffff prefix, but ``tid.x >= 16`` excludes
+    nothing (lanes 0-15 of warp 1 satisfy it)."""
+    from repro.core.analysis.relational import lanes_may
+    from repro.core.symbolic.terms import Cmp, Term
+
+    tid = Term.sym("tid.x")
+    lt16 = Cmp("lt", tid, Term.const_(16), signed=False)
+    assert lanes_may(lt16, "tid.x") == 0xFFFF
+    assert lanes_may(lt16.negate(), "tid.x") == FULL
+
+
+def test_lanes_may_laneid_and_eq():
+    from repro.core.analysis.relational import lanes_may
+    from repro.core.symbolic.terms import Cmp, Term
+
+    laneid = Term.sym("laneid")
+    ge32 = Cmp("ge", laneid, Term.const_(32), signed=False)
+    assert lanes_may(ge32, "tid.x") == 0           # vacuous guard
+    assert lanes_may(ge32.negate(), "tid.x") == FULL
+    eq5 = Cmp("eq", Term.sym("tid.x"), Term.const_(5), signed=False)
+    assert lanes_may(eq5, "tid.x") == (1 << 5)
+
+
+def test_lanes_may_conjunction_and_unknown():
+    from repro.core.analysis.relational import lanes_may
+    from repro.core.symbolic.terms import Cmp, Term, bool_and
+
+    tid = Term.sym("tid.x")
+    lt8 = Cmp("lt", tid, Term.const_(8), signed=False)
+    ge4 = Cmp("ge", tid, Term.const_(4), signed=False)
+    # conjuncts are solved independently (each gets its own q), so the
+    # conjunction is the intersection of the per-conjunct may-sets:
+    # lt8 -> 0xff, ge4 -> full (warp 1 satisfies it for every lane)
+    assert lanes_may(bool_and(lt8, ge4), "tid.x") == 0xFF
+    # unknown expressions are conservatively the full warp
+    assert lanes_may(None, "tid.x") == FULL
+    opaque = Cmp("lt", Term.sym("x"), Term.sym("y"), signed=False)
+    assert lanes_may(opaque, "tid.x") == FULL
+
+
+def test_lane_invariant():
+    from repro.core.analysis.relational import _lane_invariant
+    from repro.core.symbolic.terms import Cmp, Term
+
+    uni = Cmp("lt", Term.const_(2), Term.const_(4), signed=False)
+    assert _lane_invariant(uni, "tid.x")
+    div = Cmp("lt", Term.sym("tid.x"), Term.const_(16), signed=False)
+    assert not _lane_invariant(div, "tid.x")
+    # an opaque symbol might be lane-dependent: conservatively varying
+    opaque = Cmp("lt", Term.sym("k"), Term.const_(4), signed=False)
+    assert not _lane_invariant(opaque, "tid.x")
+    # lane terms cancel across the comparison -> warp-uniform again
+    tid = Term.sym("tid.x")
+    cancel = Cmp("lt", tid.add(Term.const_(1)), tid, signed=False)
+    assert _lane_invariant(cancel, "tid.x")
+
+
+# ---------------------------------------------------------------------------
+# the relational fixpoint
+# ---------------------------------------------------------------------------
+
+STRAIGHT_PTX = """
+.visible .entry straight(.param .u64 a)
+{
+    .reg .u32 %r<6>;
+    .reg .u64 %rd<4>;
+    ld.param.u64 %rd1, [a];
+    mov.u32 %r1, 5;
+    add.u32 %r2, %r1, 3;
+    shl.b32 %r3, %r2, 2;
+    st.global.u32 [%rd1], %r3;
+    ret;
+}
+"""
+
+
+def test_fixpoint_constant_propagation():
+    ctx = _ctx(STRAIGHT_PTX)
+    rel = ctx.get("relational")
+    cfg = ctx.get("cfg")
+    env = rel.exit[cfg.entry]
+    assert env.regs["%r1"].as_const == 5
+    assert env.regs["%r2"].as_const == 8
+    assert env.regs["%r3"].as_const == 32
+
+
+def test_fixpoint_loop_carried_binding_dropped():
+    """mask_loop_carried.ptx: %r4 is 0xffffffff on entry but shifted
+    every trip — the loop-head intersection must drop the binding
+    rather than keep the first-trip constant (a false PROVEN-OK)."""
+    ctx = _ctx(_corpus("mask_loop_carried.ptx"))
+    rel = ctx.get("relational")
+    cfg = ctx.get("cfg")
+    decoded = ctx.get("decoded")
+    from repro.core.emulator.decode import K_SHFL
+    [shfl] = [d for d in decoded if d.kind == K_SHFL]
+    head = cfg.block_of[shfl.uid]
+    got = rel.entry[head].regs.get("%r4")
+    assert got is None or got.as_const is None
+    # ...and the prover agrees: unprovable, not proven
+    from repro.core.analysis.relational import prove_shfl_masks
+    proof = prove_shfl_masks(ctx)[shfl.uid]
+    assert proof.verdict == "unknown"
+
+
+def test_prover_verdicts_on_corpus():
+    from repro.core.analysis.relational import prove_shfl_masks
+    from repro.core.emulator.decode import K_SHFL
+
+    def _one(fname):
+        ctx = _ctx(_corpus(fname))
+        [shfl] = [d for d in ctx.get("decoded") if d.kind == K_SHFL]
+        return ctx, prove_shfl_masks(ctx)[shfl.uid]
+
+    _, p = _one("mask_reg_full.ptx")
+    assert (p.verdict, p.via, p.mask) == ("proven", "const-reg", FULL)
+    _, p = _one("mask_wrong.ptx")
+    assert p.verdict == "noncovering"
+    assert p.survivors & ~p.mask & FULL == 0xFFFF0000
+    _, p = _one("mask_guarded_covering.ptx")
+    assert (p.verdict, p.mask, p.survivors) == ("proven", 0xFFFF, 0xFFFF)
+
+
+# ---------------------------------------------------------------------------
+# survivor sets
+# ---------------------------------------------------------------------------
+
+def test_survivors_exit_guard_prefix():
+    """tid.x >= 16 exits: the guarded region's survivor set is the
+    0xffff prefix with a contiguous bound of 16 lanes."""
+    from test_lint import UNGATED_PTX
+    ctx = _ctx(UNGATED_PTX)
+    surv = ctx.get("survivors")
+    cfg = ctx.get("cfg")
+    decoded = ctx.get("decoded")
+    from repro.core.emulator.decode import K_LD
+    guarded = {cfg.block_of[d.uid] for d in decoded
+               if d.kind == K_LD and d.space == "global"}
+    assert len(guarded) == 1
+    [bid] = guarded
+    assert surv.lanes[bid] == 0xFFFF
+    assert surv.contiguous_bound(bid) == 16
+    assert not surv.proven_full(bid)
+    assert surv.proven_full(cfg.entry)
+    assert surv.contiguous_bound(cfg.entry) is None   # full is not a clamp
+
+
+VACUOUS_PTX = """
+.visible .entry vacuous(.param .u64 a, .param .u64 b)
+{
+    .reg .pred %p<2>;
+    .reg .u32 %r<8>;
+    .reg .u64 %rd<8>;
+    ld.param.u64 %rd1, [a];
+    ld.param.u64 %rd2, [b];
+    mov.u32 %r1, %tid.x;
+    mov.u32 %r5, %laneid;
+    setp.ge.u32 %p1, %r5, 32;
+    @%p1 bra OTHER;
+    mul.wide.u32 %rd3, %r1, 4;
+    add.u64 %rd4, %rd1, %rd3;
+    ld.global.u32 %r2, [%rd4];
+    add.u64 %rd5, %rd4, 4;
+    ld.global.u32 %r3, [%rd5];
+    add.u32 %r4, %r2, %r3;
+    add.u64 %rd6, %rd2, %rd3;
+    st.global.u32 [%rd6], %r4;
+    bra DONE;
+OTHER:
+    mul.wide.u32 %rd3, %r1, 4;
+    add.u64 %rd6, %rd2, %rd3;
+    st.global.u32 [%rd6], %r1;
+DONE:
+    ret;
+}
+"""
+
+
+def test_survivors_declassify_vacuous_guard():
+    """%laneid >= 32 is unsatisfiable: raw uniformity calls the branch
+    JOIN (both sides do observable work), the survivor analysis proves
+    the taken edge dead and declassifies the whole region."""
+    from repro.core.analysis.uniformity import JOIN, UNIFORM
+    ctx = _ctx(VACUOUS_PTX)
+    info = ctx.get("uniformity")
+    assert JOIN in info.branch_class.values()
+    surv = ctx.get("survivors")
+    assert surv.n_refined >= 1
+    assert all(lvl == UNIFORM for lvl in surv.block_level)
+    from repro.core.analysis.relational import refined_join_block_ids
+    assert refined_join_block_ids(ctx) == frozenset()
+
+
+# ---------------------------------------------------------------------------
+# proof-widened synthesis
+# ---------------------------------------------------------------------------
+
+def test_widen_keeps_vacuously_gated_pair():
+    from repro.core.driver import Compiler
+
+    with Compiler(jobs=0) as cc:
+        off = cc.compile(VACUOUS_PTX, cache=None)
+    assert off.n_shuffles == 0
+    assert off.lint_counters.get("lint_gated_pairs") == 1
+
+    with Compiler(jobs=0, widen=True) as cc:
+        on = cc.compile(VACUOUS_PTX, cache=None)
+    assert on.n_shuffles == 1
+    assert on.lint_counters.get("lint_widened_pairs") == 1
+    assert "lint_widening_reverted" not in on.lint_counters
+
+
+def test_widen_clamps_exit_guard_masks():
+    """Under the tid.x < 16 exit guard the proven survivor prefix
+    tightens the synthesized corner-case checks: activemask compared
+    against 0xffff (not -1), the down-shuffle threshold drops from 30
+    to 14, and the shfl.sync membermask names exactly the survivors."""
+    from test_lint import UNGATED_PTX
+    from repro.core.driver import Compiler
+
+    with Compiler(jobs=0, target="volta") as cc:
+        off = cc.compile(UNGATED_PTX, cache=None)
+    assert off.n_shuffles == 1
+    assert "0xffffffff" in off.ptx and "0xffff;" not in off.ptx
+
+    with Compiler(jobs=0, target="volta", widen=True) as cc:
+        on = cc.compile(UNGATED_PTX, cache=None)
+    assert on.n_shuffles == 1
+    assert on.lint_counters.get("lint_survivor_clamps") == 1
+    assert "lint_widening_reverted" not in on.lint_counters
+    assert "0xffff" in on.ptx
+    assert "shfl.sync.down.b32" in on.ptx
+    # the clamped membermask is self-provable by the lint prover
+    from repro.core.analysis.lint import lint_source, summarize
+    s = summarize(lint_source(on.ptx))
+    assert s["errors"] == 0 and s["warnings"] == 0
+    assert s["proven_masks"] == 1
+
+
+def test_widen_off_is_byte_identical_and_cached_separately():
+    from repro.core.driver import Compiler
+    from repro.core.passes.context import PipelineConfig
+    from test_lint import UNGATED_PTX
+
+    with Compiler(jobs=0, target="volta") as cc:
+        default = cc.compile(UNGATED_PTX, cache=None)
+    with Compiler(jobs=0, target="volta", widen=False) as cc:
+        explicit = cc.compile(UNGATED_PTX, cache=None)
+    assert default.ptx == explicit.ptx
+    assert PipelineConfig().cache_token \
+        != PipelineConfig(widen=True).cache_token
+
+
+def test_widened_suite_stays_differentially_sound():
+    """widen=on over the full KernelGen suite: every widened decision
+    re-validates through the differential gate (no silent divergence),
+    and the synthesized shuffle count never regresses."""
+    from repro.core.driver import Compiler
+    from repro.core.frontend.kernelgen import all_benches
+    from repro.core.frontend.stencil import lower_to_ptx
+    from repro.core.ptx import Module
+
+    module = Module(kernels=[lower_to_ptx(b.program)
+                             for b in all_benches().values()])
+    with Compiler(jobs=0, target="volta") as cc:
+        off = cc.compile(module, cache=None)
+    with Compiler(jobs=0, target="volta", widen=True) as cc:
+        on = cc.compile(module, cache=None)
+    assert on.n_shuffles >= off.n_shuffles
+    assert "lint_widening_reverted" not in on.lint_counters
+
+
+# ---------------------------------------------------------------------------
+# finding dedup regression: one load, two racing stores
+# ---------------------------------------------------------------------------
+
+TWO_RACES_PTX = """
+.visible .entry two_races(.param .u64 a)
+{
+    .reg .u32 %r<8>;
+    .reg .u64 %rd<8>;
+    ld.param.u64 %rd1, [a];
+    mov.u32 %r1, %tid.x;
+    mul.wide.u32 %rd2, %r1, 4;
+    st.shared.u32 [%rd2], %r1;
+    mov.u64 %rd4, 128;
+    st.shared.u32 [%rd4], %r1;
+    add.u32 %r2, %r1, 1;
+    mul.wide.u32 %rd3, %r2, 4;
+    ld.shared.u32 %r3, [%rd3];
+    add.u64 %rd5, %rd1, %rd2;
+    st.global.u32 [%rd5], %r3;
+    ret;
+}
+"""
+
+
+def test_two_stores_racing_one_load_stay_distinct():
+    """Both unsynchronized stores race the load; the operand detail in
+    the dedup key keeps the two same-coded, same-uid diagnostics from
+    collapsing into one."""
+    from repro.core.analysis.lint import lint_source
+    from repro.core.driver import Compiler
+
+    findings = [f for f in lint_source(TWO_RACES_PTX)
+                if f.code == "shared-race"]
+    assert len(findings) == 2
+    assert len({f.detail for f in findings}) == 2
+    assert len({f.location for f in findings}) == 2
+
+    with Compiler(jobs=0, lint="warn") as cc:
+        result = cc.compile(TWO_RACES_PTX, cache=None)
+    coded = [d for d in result.diagnostics if d.code == "shared-race"]
+    assert len(coded) == 2
+
+
+# ---------------------------------------------------------------------------
+# service counters
+# ---------------------------------------------------------------------------
+
+def test_service_reports_proven_masks():
+    from repro.launch.ptx_service import PtxServiceClient, PtxServiceServer
+
+    with PtxServiceServer(port=0, jobs=0) as server:
+        server.start()
+        client = PtxServiceClient(server.host, server.port)
+        reply = client.lint(ptx=_corpus("mask_reg_full.ptx"))
+        assert reply["clean"] is True          # a NOTE never fails
+        assert [f["code"] for f in reply["findings"]] \
+            == ["membermask-proven"]
+        assert reply["counts"]["lint_membermask_proven"] == 1
+        stats = client.stats()
+        assert stats["lint_counters"]["lint_membermask_proven"] == 1
